@@ -1,0 +1,78 @@
+"""Roofline table from dry-run JSONs (EXPERIMENTS.md §Roofline source).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+       [--mesh pod1] [--mode baseline] [--markdown]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(dir_, mesh="pod1", mode=None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh:
+            continue
+        if mode is not None and r.get("mode") != mode:
+            continue
+        cells.append(r)
+    return cells
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def report(cells, markdown=False):
+    hdr = ["arch", "shape", "mode", "status", "compute", "memory", "collective",
+           "bneck", "useful", "frac"]
+    rows = []
+    for r in sorted(cells, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r.get("mode", ""),
+                         r["status"], "-", "-", "-", "-", "-", "-"])
+            continue
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r.get("mode", ""), "ok",
+            fmt_s(rl["compute_s"]), fmt_s(rl["memory_s"]),
+            fmt_s(rl["collective_s"]), rl["bottleneck"],
+            f"{rl['useful_flops_ratio']:.2f}",
+            f"{rl['roofline_fraction']:.4f}",
+        ])
+    widths = [max(len(str(row[i])) for row in rows + [hdr])
+              for i in range(len(hdr))]
+    sep = " | " if markdown else "  "
+    lines = []
+    lines.append(sep.join(h.ljust(w) for h, w in zip(hdr, widths)))
+    if markdown:
+        lines[0] = "| " + lines[0] + " |"
+        lines.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for row in rows:
+        line = sep.join(str(c).ljust(w) for c, w in zip(row, widths))
+        lines.append("| " + line + " |" if markdown else line)
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.mesh, args.mode)
+    print(report(cells, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""The paper's technique as a first-class retrieval feature: accelerated
+HITS over the user->item interaction graph yields an item-authority prior
+blended into two-tower candidate scoring.
+
+    PYTHONPATH=src python examples/retrieval_with_hits.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import accel_hits  # noqa: E402
+from repro.graph import bipartite_interactions  # noqa: E402
+from repro.models.recsys import (TwoTowerConfig, init_twotower_params,
+                                 retrieval_topk, twotower_loss)  # noqa: E402
+from repro.train import (AdamWConfig, DataConfig, init_opt_state,
+                         make_train_step, twotower_batch)  # noqa: E402
+
+
+def main():
+    n_users, n_items = 2000, 3000
+    g = bipartite_interactions(n_users, n_items, 30000, seed=7)
+    print(f"interaction graph: {n_users} users, {n_items} items, "
+          f"{g.n_edges} interactions")
+
+    # 1) item authority via the paper's accelerated HITS (items = dsts)
+    r = accel_hits(g, tol=1e-9)
+    prior = jnp.asarray(np.asarray(r.aux[n_users:]) + 1e-12)
+    print(f"accelerated HITS: {r.iters} iters; "
+          f"top item authority={float(prior.max()):.5f}")
+
+    # 2) train the two-tower retriever briefly
+    cfg = TwoTowerConfig(name="tt", embed_dim=32, tower_mlp=(64, 32),
+                         n_users=n_users, n_items=n_items)
+    params = init_twotower_params(cfg, jax.random.key(0))
+    dc = DataConfig(kind="twotower", global_batch=256, seed=1)
+    step = jax.jit(make_train_step(
+        lambda p, b: twotower_loss(p, b, cfg),
+        AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)))
+    st = init_opt_state(params)
+    for s in range(60):
+        params, st, m = step(params, st,
+                             twotower_batch(dc, s, n_users, n_items))
+    print(f"two-tower trained: loss={float(m['loss']):.3f}")
+
+    # 3) retrieval with and without the authority prior
+    users = jnp.arange(8)
+    cands = jnp.arange(n_items)
+    _, base = retrieval_topk(params, users, cands, k=20)
+    _, blended = retrieval_topk(params, users, cands, k=20,
+                                prior=prior, prior_weight=0.5)
+    pri = np.asarray(prior)
+    print(f"mean authority of top-20: base={pri[np.asarray(base)].mean():.2e} "
+          f"blended={pri[np.asarray(blended)].mean():.2e} "
+          f"(prior promotes popular items)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end production ranking job (the paper's workload as deployed):
+
+crawl-scale synthetic web graph -> back-button transform -> fault-tolerant
+sharded engine (checkpointing + simulated stragglers) -> accelerated-HITS
+vectors -> exact QI-HITS refinement warm-started from them (paper §5) ->
+ranked index written to disk.
+
+    PYTHONPATH=src python examples/webgraph_ranking_e2e.py
+"""
+import os
+import tempfile
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import back_button, qi_hits, spearman  # noqa: E402
+from repro.core.engine import RankingEngine  # noqa: E402
+from repro.core.hits import EdgeList, hits_sweep  # noqa: E402
+from repro.core.power import power_method  # noqa: E402
+from repro.graph import paper_dataset  # noqa: E402
+
+
+def main():
+    g = back_button(paper_dataset("stanford", scale=0.15))
+    print(f"graph: N={g.n_nodes} E={g.n_edges} "
+          f"dangling={g.dangling_fraction():.1%}")
+
+    ckpt = tempfile.mkdtemp(prefix="rank_ckpt_")
+    eng = RankingEngine(g, "accel", n_shards=8, stale_limit=2,
+                        straggler_prob=0.15, checkpoint_dir=ckpt,
+                        checkpoint_every=10, seed=0)
+    t0 = time.time()
+    res = eng.run(tol=1e-9)
+    print(f"accelerated HITS: {res.iters} iters, {time.time()-t0:.1f}s, "
+          f"stale_events={res.stale_events} (bounded-staleness tolerated), "
+          f"checkpoints in {ckpt}")
+
+    # paper §5: a few QI-HITS sweeps warm-started from the accelerated
+    # vectors recover the exact fixed point cheaply
+    t0 = time.time()
+    warm = power_method(hits_sweep(EdgeList.from_graph(g)),
+                        jnp.asarray(res.hub), tol=1e-9)
+    cold = qi_hits(g, tol=1e-9)
+    print(f"QI-HITS refinement: {warm.iters} warm-start iters vs "
+          f"{cold.iters} from cold ({time.time()-t0:.1f}s)")
+    print(f"final agreement with exact QI-HITS: "
+          f"spearman={spearman(warm.v, cold.v):.4f}")
+
+    out = os.path.join(ckpt, "ranked_index.npz")
+    order = np.argsort(-res.authority)
+    np.savez(out, page=order, authority=res.authority[order])
+    print(f"ranked index written: {out} ({len(order)} pages)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: accelerated-HITS ranking + multi-pod JAX training framework.
+
+Reproduces and extends Mirzal & Furukawa (2009), "A Method for Accelerating
+the HITS Algorithm". See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

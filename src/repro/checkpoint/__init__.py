@@ -1,0 +1,3 @@
+from .checkpoint import latest_step, prune, restore, save
+
+__all__ = ["latest_step", "prune", "restore", "save"]

@@ -1,0 +1,105 @@
+"""Sharded checkpointing with atomic manifests.
+
+Layout: <dir>/step_<k>/arrays.npz + manifest.json. Writes go to a temp dir
+and are os.replace'd into place, so a preemption mid-write never corrupts
+the latest checkpoint. ``latest_step``/``restore`` drive cold restarts; the
+ranking engine and the training loop both checkpoint through this module.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k={p.key}"
+    if hasattr(p, "idx"):
+        return f"i={p.idx}"
+    return str(p)
+
+
+def _unflatten_into(template, arrays: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+        manifest = {"step": step, "time": time.time(), "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None):
+    """Returns (tree, step, extra). ``template`` provides structure+dtypes."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    return _unflatten_into(template, arrays), step, manifest.get("extra", {})
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    """Keep the newest ``keep`` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (
+        int(n[5:]) for n in os.listdir(ckpt_dir) if n.startswith("step_")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)

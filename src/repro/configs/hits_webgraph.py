@@ -1,0 +1,23 @@
+"""The paper's own workload: accelerated-HITS power sweeps over web-scale
+graphs (extra cells beyond the assigned 40; used for §Perf hillclimb #3)."""
+import dataclasses
+
+from .base import ArchSpec, RANKING_SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class RankingConfig:
+    name: str = "hits-webgraph"
+    algorithm: str = "accel"      # "accel" | "hits"
+    mode: str = "replicated"      # edge sharding strategy (see sparse.dist)
+    dtype: str = "float32"
+
+
+CONFIG = RankingConfig()
+SMOKE_CONFIG = RankingConfig(name="hits-webgraph-smoke")
+
+SPEC = ArchSpec(
+    arch_id="hits-webgraph", family="ranking", config=CONFIG,
+    smoke_config=SMOKE_CONFIG, shapes=RANKING_SHAPES,
+    notes="paper's QI-HITS/accelerated-HITS sweep as a multi-pod workload",
+)

@@ -1,0 +1,35 @@
+"""PageRank (Algorithm 3, Langville-Meyer formulation) — the paper's second
+baseline. p ← α·p·Do⁻¹·L + (α·p·d + 1-α)·eᵀ/N."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import Graph
+from ..sparse.spmv import spmv_dst
+from .power import PowerResult, power_method
+
+
+def pagerank(g: Graph, alpha: float = 0.85, tol: float = 1e-10,
+             max_iter: int = 2000, v: int = 1, dtype=jnp.float64,
+             **kw) -> PowerResult:
+    outdeg = g.outdeg().astype(np.float64)
+    inv_out = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0)
+    dangling = (outdeg == 0).astype(np.float64)
+    inv_out_j = jnp.asarray(inv_out, dtype)
+    dang_j = jnp.asarray(dangling, dtype)
+    src = jnp.asarray(g.src)
+    dst = jnp.asarray(g.dst)
+    n = g.n_nodes
+
+    def sweep(p):
+        scaled = p * (inv_out_j[:, None] if p.ndim == 2 else inv_out_j)
+        flow = spmv_dst(scaled, src, dst, n)
+        dang_mass = jnp.tensordot(dang_j, p, axes=((0,), (0,)))  # scalar or (V,)
+        p_new = alpha * flow + (alpha * dang_mass + (1.0 - alpha)) / n
+        return p_new, p_new
+
+    shape = (n, v) if v > 1 else (n,)
+    p0 = jnp.full(shape, 1.0 / n, dtype)
+    res = power_method(sweep, p0, tol, max_iter, **kw)
+    return res

@@ -1,0 +1,77 @@
+"""Dangling-page reordering adapted from PageRank (Langville-Meyer 2006) to
+HITS — a beyond-paper optimization (the paper cites reordering as related
+work but does not apply it to HITS).
+
+Observation: hub scores of dangling pages are identically zero (no
+out-edges), and every edge source is non-dangling. The hub chain
+h ← (a·Ca)·Lᵀ therefore lives entirely on the N_nd non-dangling pages. We
+relabel sources into a compact [0, N_nd) space and iterate an (N_nd,)-sized
+hub vector; authority stays (N,). With the paper's ~93 % dangling fractions
+this cuts every O(N) vector op (scale, normalize, residual) by >10x while
+keeping the same per-edge cost — and returns bit-identical rankings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import Graph
+from ..sparse.spmv import normalize_l1, spmv_dst, spmv_src
+from .power import PowerResult, power_method
+from .weights import accel_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactedGraph:
+    n: int            # total pages
+    n_nd: int         # non-dangling pages
+    src_c: jnp.ndarray  # (E,) edge sources in compact hub space
+    dst: jnp.ndarray    # (E,) edge destinations in full space
+    nd_ids: np.ndarray  # (N_nd,) original ids of compact slots
+
+
+def compact_nondangling(g: Graph) -> CompactedGraph:
+    dang = g.dangling_mask()
+    nd_ids = np.nonzero(~dang)[0].astype(np.int32)
+    remap = np.full(g.n_nodes, -1, np.int32)
+    remap[nd_ids] = np.arange(len(nd_ids), dtype=np.int32)
+    src_c = remap[g.src]
+    assert (src_c >= 0).all(), "edge with dangling source cannot exist"
+    return CompactedGraph(g.n_nodes, len(nd_ids), jnp.asarray(src_c),
+                          jnp.asarray(g.dst), nd_ids)
+
+
+def hits_reordered(g: Graph, accelerate: bool = False, tol=1e-10,
+                   max_iter=2000, dtype=jnp.float64, **kw) -> PowerResult:
+    """QI-HITS / accelerated HITS on the compacted hub space.
+
+    Returns hub (compact, expanded back to N on exit) and authority (N,).
+    """
+    cg = compact_nondangling(g)
+    if accelerate:
+        ca_np, ch_np = accel_weights(g.indeg(), g.outdeg())
+        ca = jnp.asarray(ca_np, dtype)                      # (N,)
+        ch_c = jnp.asarray(ch_np[cg.nd_ids], dtype)         # (N_nd,)
+    else:
+        ca = None
+        ch_c = None
+
+    def sweep(h_c):
+        hw = h_c if ch_c is None else h_c * ch_c
+        a = spmv_dst(hw, cg.src_c, cg.dst, cg.n)            # (N,)
+        aw = a if ca is None else a * ca
+        h_new = spmv_src(aw, cg.src_c, cg.dst, cg.n_nd)     # (N_nd,)
+        return normalize_l1(h_new), a
+
+    h0 = jnp.full((cg.n_nd,), 1.0 / cg.n, dtype)
+    res = power_method(sweep, h0, tol, max_iter, **kw)
+    # expand hub back to full space; recompute + normalize authority
+    h_full = np.zeros(cg.n, res.v.dtype)
+    h_full[cg.nd_ids] = res.v / max(res.v.sum(), 1e-300)
+    hw = jnp.asarray(res.v) if ch_c is None else jnp.asarray(res.v) * ch_c
+    a = spmv_dst(hw, cg.src_c, cg.dst, cg.n)
+    res.aux = np.asarray(normalize_l1(a))
+    res.v = h_full
+    return res

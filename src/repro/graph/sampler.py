@@ -1,0 +1,108 @@
+"""Neighbor sampling for minibatch GNN training (GraphSAGE-style fanout).
+
+The sampler is a real JAX-jittable fanout sampler over a padded neighbor
+table: for each seed node it draws ``fanout`` neighbors uniformly (with
+replacement, as GraphSAGE does when degree < fanout). Output shapes are
+static so the sampled subgraph feeds a jitted train step directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .structure import Graph, padded_neighbors
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SamplerTables:
+    """Device-resident neighbor table."""
+
+    nbr: jnp.ndarray   # (N, max_deg) int32
+    deg: jnp.ndarray   # (N,) int32
+
+    @staticmethod
+    def build(g: Graph, max_deg: int) -> "SamplerTables":
+        tbl, deg = padded_neighbors(g, max_deg)
+        return SamplerTables(jnp.asarray(tbl), jnp.asarray(deg))
+
+
+@partial(jax.jit, static_argnames=("fanout",))
+def sample_layer(key, tables: SamplerTables, seeds: jnp.ndarray, fanout: int):
+    """Sample ``fanout`` out-neighbors per seed.
+
+    Returns (neighbors (B, fanout) int32, mask (B, fanout) bool). Zero-degree
+    seeds yield themselves with mask=False.
+    """
+    deg = tables.deg[seeds]                                    # (B,)
+    r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 2**31 - 1)
+    idx = r % jnp.maximum(deg, 1)[:, None]                     # (B, fanout)
+    nbrs = tables.nbr[seeds[:, None], idx]
+    mask = deg[:, None] > 0
+    nbrs = jnp.where(mask, nbrs, seeds[:, None])
+    return nbrs, jnp.broadcast_to(mask, nbrs.shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SampledSubgraph:
+    """Fixed-shape k-hop sampled block used by the minibatch GIN step.
+
+    nodes: (n_total,) node ids, seeds first. edge_src/edge_dst index into
+    ``nodes`` (local ids). edge_mask marks real edges.
+    """
+
+    nodes: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    edge_mask: jnp.ndarray
+    n_seeds: int = dataclasses.field(metadata=dict(static=True))
+
+
+def sample_khop(key, tables: SamplerTables, seeds: jnp.ndarray,
+                fanouts: tuple) -> SampledSubgraph:
+    """Multi-layer fanout sampling (e.g. fanouts=(15, 10)).
+
+    Layout: nodes = [seeds, hop1 samples, hop2 samples, ...]; each sampled
+    neighbor contributes a (neighbor -> parent) message edge, matching
+    aggregation direction in GraphSAGE/GIN minibatch training.
+    """
+    frontier = seeds
+    all_nodes = [seeds]
+    srcs, dsts, masks = [], [], []
+    offset = seeds.shape[0]
+    frontier_off = 0
+    for li, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs, mask = sample_layer(sub, tables, frontier, f)    # (B, f)
+        B = frontier.shape[0]
+        parent_local = jnp.arange(B, dtype=jnp.int32) + frontier_off
+        child_local = jnp.arange(B * f, dtype=jnp.int32) + offset
+        srcs.append(child_local)
+        dsts.append(jnp.repeat(parent_local, f))
+        masks.append(mask.reshape(-1))
+        all_nodes.append(nbrs.reshape(-1))
+        frontier = nbrs.reshape(-1)
+        frontier_off = offset
+        offset += B * f
+    return SampledSubgraph(
+        nodes=jnp.concatenate(all_nodes),
+        edge_src=jnp.concatenate(srcs),
+        edge_dst=jnp.concatenate(dsts),
+        edge_mask=jnp.concatenate(masks),
+        n_seeds=int(seeds.shape[0]),
+    )
+
+
+def khop_sizes(n_seeds: int, fanouts: tuple):
+    """Static (n_nodes_total, n_edges_total) of a k-hop sample."""
+    n, e, b = n_seeds, 0, n_seeds
+    for f in fanouts:
+        e += b * f
+        b = b * f
+        n += b
+    return n, e

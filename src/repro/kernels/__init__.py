@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical sparse contractions.
+
+bsr_spmm: block-sparse adjacency x multi-vector with fused Ca/Ch scaling
+          (the accelerated-HITS sweep hot path).
+seg_matmul: tiled segment-sum as one-hot MXU matmul (GNN aggregation,
+          EmbeddingBag reduce, HITS edge scatter).
+Validated in interpret=True mode against ref.py oracles; TPU is the target.
+"""
+from .bsr_spmm import bsr_scaled_matvec
+from .ops import (DeviceBSR, bsr_matvec, build_tiled_segments,
+                  hits_sweep_bsr, pad_empty_rows, pad_messages, seg_aggregate)
+from .seg_matmul import seg_matmul
+
+__all__ = [
+    "bsr_scaled_matvec", "DeviceBSR", "bsr_matvec", "build_tiled_segments",
+    "hits_sweep_bsr", "pad_empty_rows", "pad_messages", "seg_aggregate",
+    "seg_matmul",
+]

@@ -1,0 +1,141 @@
+"""jit'd wrappers + host-side preprocessing for the Pallas kernels."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import BSR, Graph, to_bsr
+from .bsr_spmm import bsr_scaled_matvec
+from .seg_matmul import seg_matmul
+
+
+# ---------------------------------------------------------------- BSR path
+def pad_empty_rows(bsr: BSR) -> BSR:
+    """Insert a zero block at (r, 0) for every empty block-row so the kernel's
+    revisit/init logic writes every output tile."""
+    present = np.zeros(bsr.n_block_rows, bool)
+    present[bsr.brow] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    if missing.size == 0:
+        return bsr
+    bs = bsr.bs
+    blocks = np.concatenate([bsr.blocks,
+                             np.zeros((len(missing), bs, bs), np.float32)])
+    brow = np.concatenate([bsr.brow, missing])
+    bcol = np.concatenate([bsr.bcol, np.zeros(len(missing), np.int32)])
+    order = np.argsort(brow, kind="stable")
+    counts = np.bincount(brow, minlength=bsr.n_block_rows)
+    row_ptr = np.zeros(bsr.n_block_rows + 1, np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return BSR(bsr.n_nodes, bs, blocks[order], brow[order].astype(np.int32),
+               bcol[order].astype(np.int32), row_ptr)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBSR:
+    """Device-resident BSR ready for the Pallas kernel."""
+
+    blocks: jnp.ndarray  # (nblocks, bs, bs)
+    idx: jnp.ndarray     # (nblocks, 2) int32 (brow, bcol) sorted by brow
+    bs: int
+    n_nodes: int
+    n_pad: int
+
+    @staticmethod
+    def build(g: Graph, bs: int = 128, transpose: bool = False,
+              dtype=jnp.float32) -> "DeviceBSR":
+        gg = g.reverse() if transpose else g
+        bsr = pad_empty_rows(to_bsr(gg, bs))
+        idx = np.stack([bsr.brow, bsr.bcol], axis=1).astype(np.int32)
+        return DeviceBSR(jnp.asarray(bsr.blocks, dtype), jnp.asarray(idx),
+                         bs, g.n_nodes, bsr.n_padded)
+
+
+def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool = True):
+    """y = A @ (x * cin). x: (N,) | (N, V); returns matching shape (N…)."""
+    squeeze = x.ndim == 1
+    xv = x[:, None] if squeeze else x
+    pad = dbsr.n_pad - xv.shape[0]
+    xv = jnp.pad(xv, ((0, pad), (0, 0)))
+    if cin is None:
+        cv = jnp.ones((dbsr.n_pad, 1), xv.dtype)
+    else:
+        cv = jnp.pad(cin[:, None].astype(xv.dtype), ((0, pad), (0, 0)))
+    y = bsr_scaled_matvec(dbsr.blocks, dbsr.idx, xv, cv, bs=dbsr.bs,
+                          interpret=interpret)
+    y = y[: dbsr.n_nodes]
+    return y[:, 0] if squeeze else y
+
+
+def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,
+                   interpret: bool = True, dtype=jnp.float32):
+    """Accelerated-HITS sweep on the BSR kernel path.
+
+    a = Lᵀ(h ⊙ ch);  h' = L(a ⊙ ca);  h' ← h'/‖h'‖₁. Returns sweep(h)->(h',a)
+    plus the two DeviceBSR structures (LT for the authority step, L for the
+    hub step).
+    """
+    lt = DeviceBSR.build(g, bs, transpose=True, dtype=dtype)
+    l = DeviceBSR.build(g, bs, transpose=False, dtype=dtype)
+    ca_j = None if ca is None else jnp.asarray(ca, dtype)
+    ch_j = None if ch is None else jnp.asarray(ch, dtype)
+
+    def sweep(h):
+        a = bsr_matvec(lt, h, ch_j, interpret)
+        h_new = bsr_matvec(l, a, ca_j, interpret)
+        h_new = h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=h.ndim > 1) + 1e-30)
+        return h_new, a
+
+    return sweep, lt, l
+
+
+# ---------------------------------------------------------- seg_matmul path
+def build_tiled_segments(dst: np.ndarray, n_nodes: int, bs: int = 128,
+                         tile_e: int = 256):
+    """Sort edges by destination and pad each destination-block's edge run to
+    whole tiles. Returns (order, blkid (n_tiles,), off (E_pad,1), valid
+    (E_pad,1), n_blocks); gathered messages must be permuted by ``order`` and
+    zero-padded to E_pad rows (see ``pad_messages``)."""
+    order = np.argsort(dst // bs, kind="stable")
+    dst_sorted = dst[order]
+    blk = dst_sorted // bs
+    n_blocks = (n_nodes + bs - 1) // bs
+    counts = np.bincount(blk, minlength=n_blocks)
+    tiles_per_blk = np.maximum(1, -(-counts // tile_e))
+    n_tiles = int(tiles_per_blk.sum())
+    e_pad = n_tiles * tile_e
+    blkid = np.repeat(np.arange(n_blocks, dtype=np.int32), tiles_per_blk)
+    off = np.zeros((e_pad, 1), np.int32)
+    valid = np.zeros((e_pad, 1), np.int32)
+    perm = np.full(e_pad, -1, np.int64)  # padded slot -> original edge
+    write = 0
+    read = 0
+    for b in range(n_blocks):
+        c = int(counts[b])
+        slots = int(tiles_per_blk[b]) * tile_e
+        off[write:write + c, 0] = dst_sorted[read:read + c] - b * bs
+        valid[write:write + c, 0] = 1
+        perm[write:write + c] = order[read:read + c]
+        write += slots
+        read += c
+    return {"perm": perm, "blkid": blkid, "off": off, "valid": valid,
+            "n_blocks": n_blocks, "e_pad": e_pad}
+
+
+def pad_messages(msgs: jnp.ndarray, seg) -> jnp.ndarray:
+    """Arrange per-edge messages into the padded tile layout."""
+    perm = np.maximum(seg["perm"], 0)
+    out = jnp.take(msgs, jnp.asarray(perm), axis=0)
+    return out * jnp.asarray(seg["valid"], msgs.dtype)
+
+
+def seg_aggregate(msgs, seg, *, bs: int = 128, n_nodes: int,
+                  interpret: bool = True):
+    """Full segment-sum: messages (E, F) -> node aggregates (n_nodes, F)."""
+    m = pad_messages(msgs, seg)
+    y = seg_matmul(jnp.asarray(seg["blkid"]), m, jnp.asarray(seg["off"]),
+                   jnp.asarray(seg["valid"]), seg["n_blocks"], bs=bs,
+                   interpret=interpret)
+    return y[:n_nodes]

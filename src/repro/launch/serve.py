@@ -1,0 +1,63 @@
+"""Serving launcher: batched greedy decode with KV cache (LM archs) or
+batched scoring (recsys archs).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
+      --batch 4 --prompt-len 8 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from ..configs import get_spec
+    from ..models import transformer as tf_m
+
+    spec = get_spec(args.arch)
+    if spec.family != "lm":
+        raise SystemExit("decode serving applies to LM archs")
+    cfg = spec.smoke_config if args.smoke else spec.config
+    key = jax.random.key(0)
+    params = tf_m.init_params(cfg, key)
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+    cache = tf_m.init_cache(cfg, b, max_len)
+    prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab)
+
+    step = jax.jit(tf_m.decode_step, static_argnames="cfg")
+    # prefill via decode steps (simple driver; chunked prefill in launch
+    # would lower tf_m.forward — see dryrun prefill cells)
+    tok = prompts[:, 0]
+    t0 = time.time()
+    generated = []
+    for pos in range(max_len - 1):
+        logits, cache = step(params, cache, tok, jnp.array(pos), cfg)
+        if pos + 1 < args.prompt_len:
+            tok = prompts[:, pos + 1]
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+            generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(generated, axis=1)
+    print(f"arch={cfg.name} batch={b} prompt={args.prompt_len} "
+          f"gen={len(generated)} tokens")
+    print(f"throughput: {b * len(generated) / dt:.1f} tok/s (host devices)")
+    for i in range(min(b, 2)):
+        print(f"  seq{i}: {prompts[i].tolist()} -> {gen[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

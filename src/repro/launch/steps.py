@@ -1,0 +1,460 @@
+"""Step functions lowered by the dry-run / launchers, one per (family, kind).
+
+Each builder returns (step_fn, make_input_specs, in_specs_tree) where
+make_input_specs() yields ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) and in_specs_tree gives logical PartitionSpecs for every arg.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchSpec
+from ..graph.sampler import khop_sizes
+from ..models import gnn as gnn_m
+from ..models import recsys as rs
+from ..models import transformer as tf_m
+from ..models.sharding import DP
+from ..train.optimizer import AdamWConfig, init_opt_state, opt_state_specs
+from ..train.train_step import make_train_step
+
+EDGE = (("pod", "data", "model"),)  # edge arrays shard over the whole mesh
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class LoweredStep:
+    name: str
+    fn: Any                    # callable to jit
+    args: tuple                # ShapeDtypeStruct pytree(s)
+    in_specs: tuple            # logical PartitionSpec pytree(s)
+    static_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+# ------------------------------------------------------------------------ LM
+def _lm_abstract_state(cfg):
+    params = jax.eval_shape(lambda: tf_m.init_params(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    return params, opt
+
+
+def lm_train(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = spec.config
+    b, s = shape["global_batch"], shape["seq_len"]
+    params, opt = _lm_abstract_state(cfg)
+    opt_cfg = AdamWConfig()
+    step = make_train_step(partial(tf_m.loss_fn, cfg=cfg), opt_cfg)
+    batch = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+    pspecs = tf_m.param_specs(cfg)
+    return LoweredStep(
+        name=f"{cfg.name}-train", fn=step,
+        args=(params, opt, batch),
+        in_specs=(pspecs, opt_state_specs(pspecs),
+                  {"tokens": P(DP, None), "labels": P(DP, None)}),
+        meta={"model_flops_per_step": 6 * cfg.n_active_params() * b * s},
+    )
+
+
+def lm_prefill(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = spec.config
+    b, s = shape["global_batch"], shape["seq_len"]
+    params, _ = _lm_abstract_state(cfg)
+
+    def prefill(params, tokens):
+        x, _ = tf_m.forward(params, tokens, cfg)
+        # next-token logits for the last position of every sequence
+        return jnp.einsum("bd,dv->bv", x[:, -1],
+                          params["unembed"].astype(cfg.cdt()))
+
+    return LoweredStep(
+        name=f"{cfg.name}-prefill", fn=prefill,
+        args=(params, {"tokens": _sds((b, s), jnp.int32)}["tokens"]),
+        in_specs=(tf_m.param_specs(cfg), P(DP, None)),
+        meta={"model_flops_per_step": 2 * cfg.n_active_params() * b * s},
+    )
+
+
+def lm_decode(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = spec.config
+    b, s = shape["global_batch"], shape["seq_len"]
+    params, _ = _lm_abstract_state(cfg)
+    cache = jax.eval_shape(lambda: tf_m.init_cache(cfg, b, s))
+
+    def step(params, cache, tokens, pos):
+        return tf_m.decode_step(params, cache, tokens, pos, cfg)
+
+    return LoweredStep(
+        name=f"{cfg.name}-decode", fn=step,
+        args=(params, cache, _sds((b,), jnp.int32), _sds((), jnp.int32)),
+        in_specs=(tf_m.param_specs(cfg), tf_m.cache_specs(cfg), P(DP), P()),
+        meta={"model_flops_per_step": 2 * cfg.n_active_params() * b},
+    )
+
+
+# ----------------------------------------------------------------------- GNN
+def _gnn_cfg(spec: ArchSpec, shape: dict):
+    from ..configs.gin_tu import for_shape
+    return for_shape(shape)
+
+
+def gnn_full_train(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = _gnn_cfg(spec, shape)
+    n, e = shape["n_nodes"], shape["n_edges"]
+    # pad edges to a shardable multiple; pad edges use dst=N which
+    # segment_sum drops (out-of-range scatter), so results are unchanged
+    e = -(-e // 4096) * 4096
+    params = jax.eval_shape(lambda: gnn_m.init_gin_params(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    step = make_train_step(partial(gnn_m.node_loss, cfg=cfg), AdamWConfig())
+    batch = {
+        "x": _sds((n, cfg.d_in), jnp.float32),
+        "src": _sds((e,), jnp.int32),
+        "dst": _sds((e,), jnp.int32),
+        "labels": _sds((n,), jnp.int32),
+        "train_mask": _sds((n,), jnp.float32),
+    }
+    bspec = {"x": P(DP, None), "src": P(EDGE[0]), "dst": P(EDGE[0]),
+             "labels": P(DP), "train_mask": P(DP)}
+    pspec = jax.tree.map(lambda _: P(), params)
+    # GIN layer FLOPs: 2*E*dh (aggregate) + 2*N*dh*dh*2 (MLP) per layer
+    dh = cfg.d_hidden
+    mf = cfg.n_layers * (2 * e * dh + 4 * n * dh * dh) + 2 * n * cfg.d_in * dh
+    return LoweredStep(
+        name=f"{cfg.name}-full-train", fn=step, args=(params, opt, batch),
+        in_specs=(pspec, opt_state_specs(pspec), bspec),
+        meta={"model_flops_per_step": 3 * mf},  # fwd + 2x bwd
+    )
+
+
+def gnn_sampled_train(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = _gnn_cfg(spec, shape)
+    bn, fanout = shape["batch_nodes"], tuple(shape["fanout"])
+    n_tot, e_tot = khop_sizes(bn, fanout)
+    params = jax.eval_shape(lambda: gnn_m.init_gin_params(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    loss = partial(gnn_m.sampled_loss, cfg=cfg)
+    step = make_train_step(lambda p, b: loss(p, {**b, "n_seeds": bn}),
+                           AdamWConfig())
+    batch = {
+        "feats": _sds((n_tot, cfg.d_in), jnp.float32),
+        "edge_src": _sds((e_tot,), jnp.int32),
+        "edge_dst": _sds((e_tot,), jnp.int32),
+        "edge_mask": _sds((e_tot,), jnp.bool_),
+        "labels": _sds((bn,), jnp.int32),
+    }
+    bspec = {"feats": P(DP, None), "edge_src": P(EDGE[0]),
+             "edge_dst": P(EDGE[0]), "edge_mask": P(EDGE[0]), "labels": P(DP)}
+    pspec = jax.tree.map(lambda _: P(), params)
+    dh = cfg.d_hidden
+    mf = cfg.n_layers * (2 * e_tot * dh + 4 * n_tot * dh * dh) \
+        + 2 * n_tot * cfg.d_in * dh
+    return LoweredStep(
+        name=f"{cfg.name}-sampled-train", fn=step, args=(params, opt, batch),
+        in_specs=(pspec, opt_state_specs(pspec), bspec),
+        meta={"model_flops_per_step": 3 * mf,
+              "note": "sampler runs host-side; see graph.sampler"},
+    )
+
+
+def gnn_graph_train(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = _gnn_cfg(spec, shape)
+    b, nn, ne = shape["global_batch"], shape["n_nodes"], shape["n_edges"]
+    params = jax.eval_shape(lambda: gnn_m.init_gin_params(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    step = make_train_step(partial(gnn_m.graph_loss, cfg=cfg), AdamWConfig())
+    batch = {
+        "x": _sds((b, nn, cfg.d_in), jnp.float32),
+        "src": _sds((b, ne), jnp.int32),
+        "dst": _sds((b, ne), jnp.int32),
+        "node_mask": _sds((b, nn), jnp.float32),
+        "edge_mask": _sds((b, ne), jnp.float32),
+        "labels": _sds((b,), jnp.int32),
+    }
+    bspec = jax.tree.map(lambda _: P(DP), batch)
+    bspec = {k: (P(DP, None, None) if v.ndim == 3 else
+                 P(DP, None) if v.ndim == 2 else P(DP))
+             for k, v in batch.items()}
+    pspec = jax.tree.map(lambda _: P(), params)
+    dh = cfg.d_hidden
+    mf = b * (cfg.n_layers * (2 * ne * dh + 4 * nn * dh * dh)
+              + 2 * nn * cfg.d_in * dh)
+    return LoweredStep(
+        name=f"{cfg.name}-graph-train", fn=step, args=(params, opt, batch),
+        in_specs=(pspec, opt_state_specs(pspec), bspec),
+        meta={"model_flops_per_step": 3 * mf},
+    )
+
+
+# -------------------------------------------------------------------- recsys
+def _recsys_model(spec: ArchSpec):
+    cfg = spec.config
+    if isinstance(cfg, rs.DLRMConfig):
+        off = rs.unified_table_offsets(cfg.vocab_sizes)
+        return (partial(rs.dlrm_loss, cfg=cfg, offsets=off),
+                partial(rs.dlrm_logits, cfg=cfg, offsets=off),
+                lambda key: rs.init_dlrm_params(cfg, key), rs.dlrm_specs(cfg))
+    if isinstance(cfg, rs.DCNConfig):
+        off = rs.unified_table_offsets(cfg.vocab_sizes)
+        return (partial(rs.dcn_loss, cfg=cfg, offsets=off),
+                partial(rs.dcn_logits, cfg=cfg, offsets=off),
+                lambda key: rs.init_dcn_params(cfg, key), rs.dcn_specs(cfg))
+    if isinstance(cfg, rs.BSTConfig):
+        return (partial(rs.bst_loss, cfg=cfg),
+                partial(rs.bst_logits, cfg=cfg),
+                lambda key: rs.init_bst_params(cfg, key), rs.bst_specs(cfg))
+    if isinstance(cfg, rs.TwoTowerConfig):
+        return (partial(rs.twotower_loss, cfg=cfg), None,
+                lambda key: rs.init_twotower_params(cfg, key),
+                rs.twotower_specs(cfg))
+    raise TypeError(cfg)
+
+
+def _recsys_batch_specs(spec: ArchSpec, b: int):
+    cfg = spec.config
+    if isinstance(cfg, (rs.DLRMConfig, rs.DCNConfig)):
+        batch = {"dense": _sds((b, cfg.n_dense), jnp.float32),
+                 "sparse": _sds((b, cfg.n_sparse), jnp.int32),
+                 "label": _sds((b,), jnp.float32)}
+        bs = {"dense": P(DP, None), "sparse": P(DP, None), "label": P(DP)}
+    elif isinstance(cfg, rs.BSTConfig):
+        batch = {"hist": _sds((b, cfg.seq_len), jnp.int32),
+                 "target": _sds((b,), jnp.int32),
+                 "label": _sds((b,), jnp.float32)}
+        bs = {"hist": P(DP, None), "target": P(DP), "label": P(DP)}
+    else:
+        batch = {"user": _sds((b,), jnp.int32), "item": _sds((b,), jnp.int32)}
+        bs = {"user": P(DP), "item": P(DP)}
+    return batch, bs
+
+
+def _recsys_flops(spec: ArchSpec, b: int) -> int:
+    cfg = spec.config
+    if isinstance(cfg, rs.DLRMConfig):
+        mlps = sum(cfg.bot_mlp[i] * cfg.bot_mlp[i + 1]
+                   for i in range(len(cfg.bot_mlp) - 1))
+        top_in = cfg.n_interactions + cfg.embed_dim
+        dims = (top_in,) + cfg.top_mlp
+        mlps += sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        inter = (cfg.n_sparse + 1) ** 2 * cfg.embed_dim
+        return 2 * b * (mlps + inter)
+    if isinstance(cfg, rs.DCNConfig):
+        d0 = cfg.d_input
+        cross = cfg.n_cross_layers * d0 * d0
+        dims = (d0,) + cfg.deep_mlp
+        deep = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        return 2 * b * (cross + deep + (d0 + cfg.deep_mlp[-1]))
+    if isinstance(cfg, rs.BSTConfig):
+        d, s = cfg.embed_dim, cfg.seq_len + 1
+        blk = cfg.n_blocks * (4 * s * d * d + 2 * s * s * d + 8 * s * d * d)
+        dims = (s * d,) + cfg.mlp + (1,)
+        mlp = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        return 2 * b * (blk + mlp)
+    cfg2: rs.TwoTowerConfig = cfg
+    dims = (cfg2.embed_dim,) + cfg2.tower_mlp
+    tower = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return 2 * b * (2 * tower + b * cfg2.tower_mlp[-1])
+
+
+def recsys_train(spec: ArchSpec, shape: dict) -> LoweredStep:
+    b = shape["global_batch"]
+    loss, _logits, init, pspecs = _recsys_model(spec)
+    params = jax.eval_shape(lambda: init(jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+    step = make_train_step(loss, AdamWConfig())
+    batch, bs = _recsys_batch_specs(spec, b)
+    return LoweredStep(
+        name=f"{spec.arch_id}-train", fn=step, args=(params, opt, batch),
+        in_specs=(pspecs, opt_state_specs(pspecs), bs),
+        meta={"model_flops_per_step": 3 * _recsys_flops(spec, b)},
+    )
+
+
+def recsys_serve(spec: ArchSpec, shape: dict) -> LoweredStep:
+    b = shape["global_batch"]
+    cfg = spec.config
+    _loss, logits, init, pspecs = _recsys_model(spec)
+    params = jax.eval_shape(lambda: init(jax.random.key(0)))
+    batch, bs = _recsys_batch_specs(spec, b)
+    batch.pop("label", None)
+    bs.pop("label", None)
+    if isinstance(cfg, rs.TwoTowerConfig):
+        def fn(params, batch):
+            u = rs.user_embed(params, batch["user"])
+            v = rs.item_embed(params, batch["item"])
+            return jnp.sum(u * v, axis=-1)
+    else:
+        def fn(params, batch):
+            return logits(params, **{k: batch[k] for k in batch})
+        # adapt kw names
+        if isinstance(cfg, rs.BSTConfig):
+            def fn(params, batch):
+                return logits(params, batch["hist"], batch["target"])
+        else:
+            def fn(params, batch):
+                return logits(params, batch["dense"], batch["sparse"])
+    return LoweredStep(
+        name=f"{spec.arch_id}-serve", fn=fn, args=(params, batch),
+        in_specs=(pspecs, bs),
+        meta={"model_flops_per_step": _recsys_flops(spec, b) // 3},
+    )
+
+
+def recsys_retrieval(spec: ArchSpec, shape: dict) -> LoweredStep:
+    cfg = spec.config
+    b, c = shape["global_batch"], shape["n_candidates"]
+    _loss, logits, init, pspecs = _recsys_model(spec)
+    params = jax.eval_shape(lambda: init(jax.random.key(0)))
+    cand_spec = P(DP)
+    if isinstance(cfg, rs.TwoTowerConfig):
+        def fn(params, users, cands):
+            scores, idx = rs.retrieval_topk(params, users, cands, k=100)
+            return scores, idx
+        args = (params, _sds((b,), jnp.int32), _sds((c,), jnp.int32))
+        specs = (pspecs, P(None), cand_spec)
+        flops = 2 * c * (sum((cfg.embed_dim,) + cfg.tower_mlp) ** 1)
+    elif isinstance(cfg, rs.BSTConfig):
+        def fn(params, hist, cands):
+            h = jnp.broadcast_to(hist, (c,) + hist.shape[1:])
+            return jax.lax.top_k(logits(params, h, cands), 100)
+        args = (params, _sds((1, cfg.seq_len), jnp.int32), _sds((c,), jnp.int32))
+        specs = (pspecs, P(None, None), cand_spec)
+        flops = _recsys_flops(spec, c) // 3
+    else:
+        def fn(params, dense, sparse_user, cands):
+            d = jnp.broadcast_to(dense, (c, dense.shape[1]))
+            su = jnp.broadcast_to(sparse_user, (c, sparse_user.shape[1]))
+            ids = jnp.concatenate([cands[:, None], su[:, 1:]], axis=1)
+            return jax.lax.top_k(logits(params, d, ids), 100)
+        args = (params, _sds((1, cfg.n_dense), jnp.float32),
+                _sds((1, cfg.n_sparse), jnp.int32), _sds((c,), jnp.int32))
+        specs = (pspecs, P(None, None), P(None, None), cand_spec)
+        flops = _recsys_flops(spec, c) // 3
+    return LoweredStep(
+        name=f"{spec.arch_id}-retrieval", fn=fn, args=args, in_specs=specs,
+        meta={"model_flops_per_step": int(flops)},
+    )
+
+
+# ------------------------------------------------------------------- ranking
+def ranking_sweep(spec: ArchSpec, shape: dict, n_devices: int,
+                  mode: str = "baseline") -> LoweredStep:
+    """The paper's distributed power sweep (shard_map). Modes:
+    baseline=replicated psum; dual_blocked=block-owned scatter + all-gather
+    (2x less traffic); +bf16 halves vector bytes (fp32 norm/residual)."""
+    n, e, v = shape["n_nodes"], shape["n_edges"], shape["n_vectors"]
+    dtype = jnp.bfloat16 if "bf16" in mode else jnp.float32
+    e_loc = -(-e // n_devices)
+    espec = P(("pod", "data", "model"), None)
+    meta = {"model_flops_per_step": 4 * e * v + 6 * n * v, "mode": mode}
+    edge_args = (
+        _sds((n_devices, e_loc), jnp.int32),   # src
+        _sds((n_devices, e_loc), jnp.int32),   # dst
+        _sds((n_devices, e_loc), dtype),       # w
+        _sds((n_devices, e_loc), jnp.bool_),   # mask
+    )
+    if "dual_blocked" in mode:
+        n_h = n
+        if "compact" in mode:
+            n_h = int(n * (1 - shape.get("dangling_frac", 0.0)))
+        nb = -(-n_h // n_devices)
+        vec = _sds((n_devices, nb, v) if v > 1 else (n_devices, nb), dtype)
+        args = (vec,) + edge_args + edge_args  # a-partition + h-partition
+        in_specs = (espec,) + (espec,) * 8
+    else:
+        vec = _sds((n, v) if v > 1 else (n,), dtype)
+        args = (vec,) + edge_args
+        in_specs = (P(),) + (espec,) * 4
+    return LoweredStep(
+        name=f"hits-{shape['kind']}", fn=None,  # built against mesh in dryrun
+        args=args, in_specs=in_specs, meta=meta,
+    )
+
+
+def gnn_sampled_train_dp(spec: ArchSpec, shape: dict,
+                         mode: str = "") -> LoweredStep:
+    """§Perf variant: per-device independent subgraphs (embarrassingly
+    data-parallel minibatch GNN) instead of one global edge-sharded block.
+    Cross-device traffic collapses to the gradient all-reduce. With
+    "+onehot", aggregation becomes an einsum (batched scatters make SPMD
+    fall back to replicate+all-reduce; see models.gnn._gin_layer)."""
+    cfg = _gnn_cfg(spec, shape)
+    if "onehot" in mode:
+        cfg = dataclasses.replace(cfg, agg="onehot")
+    bn, fanout = shape["batch_nodes"], tuple(shape["fanout"])
+    n_groups = 256                       # one subgraph per device
+    seeds_per = max(bn // n_groups, 1)
+    n_tot, e_tot = khop_sizes(seeds_per, fanout)
+    params = jax.eval_shape(lambda: gnn_m.init_gin_params(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(lambda: init_opt_state(params))
+
+    def loss_batched(p, b):
+        return gnn_m.gin_sampled_batched_loss(p, b, cfg, seeds_per)
+
+    step = make_train_step(loss_batched, AdamWConfig())
+    g = n_groups
+    batch = {
+        "feats": _sds((g, n_tot, cfg.d_in), jnp.float32),
+        "edge_src": _sds((g, e_tot), jnp.int32),
+        "edge_dst": _sds((g, e_tot), jnp.int32),
+        "edge_mask": _sds((g, e_tot), jnp.bool_),
+        "labels": _sds((g, seeds_per), jnp.int32),
+    }
+    bspec = {k: P(EDGE[0], None) for k in batch}
+    pspec = jax.tree.map(lambda _: P(), params)
+    dh = cfg.d_hidden
+    mf = g * (cfg.n_layers * (2 * e_tot * dh + 4 * n_tot * dh * dh)
+              + 2 * n_tot * cfg.d_in * dh)
+    return LoweredStep(
+        name=f"{cfg.name}-sampled-train-dp", fn=step, args=(params, opt, batch),
+        in_specs=(pspec, opt_state_specs(pspec), bspec),
+        meta={"model_flops_per_step": 3 * mf},
+    )
+
+
+# ------------------------------------------------------------------ registry
+def _apply_lm_mode(spec: ArchSpec, mode: str) -> ArchSpec:
+    cfg = spec.config
+    for tok in mode.split("+"):
+        if tok == "moe_cshard":
+            cfg = dataclasses.replace(cfg, moe_c_shard_dp=True)
+        elif tok == "moe_vshard":
+            cfg = dataclasses.replace(cfg, moe_virtual_shards=16)
+        elif tok == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat_policy="dots")
+        elif tok.startswith("attn_chunk"):
+            cfg = dataclasses.replace(cfg, attn_chunk=int(tok.split("=")[1]))
+        elif tok == "baseline":
+            pass
+    return dataclasses.replace(spec, config=cfg)
+
+
+def build_step(spec: ArchSpec, shape_name: str, n_devices: int = 256,
+               mode: str = "baseline") -> LoweredStep:
+    shape = spec.shapes[shape_name]
+    kind = shape["kind"]
+    if spec.family == "lm":
+        if mode != "baseline":
+            spec = _apply_lm_mode(spec, mode)
+        return {"train": lm_train, "prefill": lm_prefill,
+                "decode": lm_decode}[kind](spec, shape)
+    if spec.family == "gnn":
+        if kind == "gnn_sampled" and "dp_subgraphs" in mode:
+            return gnn_sampled_train_dp(spec, shape, mode)
+        return {"gnn_full": gnn_full_train, "gnn_sampled": gnn_sampled_train,
+                "gnn_graph": gnn_graph_train}[kind](spec, shape)
+    if spec.family == "recsys":
+        return {"train": recsys_train, "serve": recsys_serve,
+                "retrieval": recsys_retrieval}[kind](spec, shape)
+    if spec.family == "ranking":
+        return ranking_sweep(spec, shape, n_devices, mode=mode)
+    raise ValueError(spec.family)

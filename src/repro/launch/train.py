@@ -1,0 +1,115 @@
+"""Training launcher: any --arch on the current host devices, with
+checkpoint/restart. The production-mesh path is exercised by dryrun.py
+(this container has one real device); the code path is identical — the
+mesh builder and shardings are shared.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt /tmp/lm_ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    from .. import checkpoint as ck
+    from ..configs import get_spec
+    from ..models import gnn as gnn_m
+    from ..models import recsys as rs
+    from ..models import transformer as tf_m
+    from ..train import (AdamWConfig, DataConfig, init_opt_state, lm_batch,
+                         make_train_step, recsys_batch, bst_batch,
+                         twotower_batch)
+
+    spec = get_spec(args.arch)
+    cfg = spec.smoke_config if args.smoke else spec.config
+    key = jax.random.key(0)
+
+    if spec.family == "lm":
+        params = tf_m.init_params(cfg, key)
+        loss = partial(tf_m.loss_fn, cfg=cfg)
+        dc = DataConfig(kind="lm", global_batch=args.batch, seq_len=args.seq,
+                        vocab=cfg.vocab)
+        batch_fn = partial(lm_batch, dc)
+    elif spec.family == "recsys":
+        if isinstance(cfg, rs.TwoTowerConfig):
+            params = rs.init_twotower_params(cfg, key)
+            loss = partial(rs.twotower_loss, cfg=cfg)
+            dc = DataConfig(kind="twotower", global_batch=args.batch)
+            batch_fn = lambda s: twotower_batch(dc, s, cfg.n_users, cfg.n_items)
+        elif isinstance(cfg, rs.BSTConfig):
+            params = rs.init_bst_params(cfg, key)
+            loss = partial(rs.bst_loss, cfg=cfg)
+            dc = DataConfig(kind="bst", global_batch=args.batch,
+                            sparse_vocab=cfg.vocab)
+            batch_fn = lambda s: bst_batch(dc, s, cfg.seq_len)
+        else:
+            init = (rs.init_dlrm_params if isinstance(cfg, rs.DLRMConfig)
+                    else rs.init_dcn_params)
+            params = init(cfg, key)
+            off = rs.unified_table_offsets(cfg.vocab_sizes)
+            loss_base = (rs.dlrm_loss if isinstance(cfg, rs.DLRMConfig)
+                         else rs.dcn_loss)
+            loss = partial(loss_base, cfg=cfg, offsets=off)
+            dc = DataConfig(kind="recsys", global_batch=args.batch,
+                            sparse_vocab=cfg.vocab_per_field)
+            batch_fn = partial(recsys_batch, dc)
+    elif spec.family == "gnn":
+        from ..graph import WebGraphSpec, generate_webgraph
+        g = generate_webgraph(WebGraphSpec(500, 4000, 0.2, seed=1))
+        params = gnn_m.init_gin_params(cfg, key)
+        x = jax.random.normal(key, (g.n_nodes, cfg.d_in))
+        labels = jax.random.randint(key, (g.n_nodes,), 0, cfg.n_classes)
+        gbatch = {"x": x, "src": jnp.asarray(g.src), "dst": jnp.asarray(g.dst),
+                  "labels": labels}
+        loss = partial(gnn_m.node_loss, cfg=cfg)
+        batch_fn = lambda s: gbatch
+    else:
+        raise SystemExit("use launch.rank for the ranking workload")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(loss, opt_cfg,
+                                      grad_accum=args.grad_accum))
+    opt_state = init_opt_state(params)
+    start = 0
+    if args.resume and args.ckpt and ck.latest_step(args.ckpt) is not None:
+        tree, start, _ = ck.restore(args.ckpt,
+                                    {"params": params, "opt": opt_state})
+        params, opt_state = tree["params"], tree["opt"]
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        params, opt_state, m = step_fn(params, opt_state, batch_fn(s))
+        if s % 10 == 0 or s == args.steps - 1:
+            print(f"step {s:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.3f}",
+                  flush=True)
+        if args.ckpt and args.ckpt_every and (s + 1) % args.ckpt_every == 0:
+            ck.save(args.ckpt, s + 1, {"params": params, "opt": opt_state})
+            ck.prune(args.ckpt, keep=3)
+    print(f"done: {args.steps - start} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

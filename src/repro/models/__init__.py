@@ -1,0 +1,13 @@
+from .transformer import (TransformerConfig, init_params, forward, loss_fn,
+                          init_cache, decode_step, param_specs, cache_specs)
+from .gnn import (GINConfig, init_gin_params, gin_forward, gin_node_logits,
+                  gin_graph_logits_batched, gin_sampled_logits, node_loss,
+                  graph_loss, sampled_loss)
+from .recsys import (DLRMConfig, DCNConfig, BSTConfig, TwoTowerConfig,
+                     init_dlrm_params, init_dcn_params, init_bst_params,
+                     init_twotower_params, dlrm_logits, dcn_logits,
+                     bst_logits, dlrm_loss, dcn_loss, bst_loss,
+                     twotower_loss, retrieval_topk, retrieval_scores,
+                     embedding_bag, embedding_lookup, unified_table_offsets,
+                     dlrm_specs, dcn_specs, bst_specs, twotower_specs)
+from .sharding import DP, shard_hint, filter_spec, tree_filter_specs

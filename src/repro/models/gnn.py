@@ -1,0 +1,182 @@
+"""GIN (Xu et al., ICLR'19) message passing on jnp.take + segment_sum — the
+same sparse substrate as the ranking engine (DESIGN.md §4: direct overlap
+with the paper's compute pattern).
+
+Three execution modes matching the assigned shapes:
+* full-graph   (full_graph_sm / ogb_products): all nodes + edges at once
+* sampled      (minibatch_lg): fanout-sampled k-hop blocks from graph.sampler
+* batched      (molecule): padded per-graph tensors, vmapped
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import DP, shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_in: int = 64
+    d_hidden: int = 64
+    n_classes: int = 16
+    task: str = "node"          # "node" | "graph"
+    param_dtype: str = "float32"
+    agg: str = "segment"        # "segment" (scatter-add) | "onehot" (MXU
+    #                              einsum — the seg_matmul trick; SPMD-clean)
+
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def init_gin_params(cfg: GINConfig, key):
+    pdt = cfg.pdt()
+    k = jax.random.split(key, 8)
+    L, dh = cfg.n_layers, cfg.d_hidden
+    s_in = 1.0 / jnp.sqrt(cfg.d_in).astype(jnp.float32)
+    s_h = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    return {
+        "encoder": (s_in * jax.random.normal(k[0], (cfg.d_in, dh), jnp.float32)).astype(pdt),
+        "layers": {
+            "eps": jnp.zeros((L,), pdt),  # learnable (GIN-eps)
+            "w1": (s_h * jax.random.normal(k[1], (L, dh, dh), jnp.float32)).astype(pdt),
+            "b1": jnp.zeros((L, dh), pdt),
+            "w2": (s_h * jax.random.normal(k[2], (L, dh, dh), jnp.float32)).astype(pdt),
+            "b2": jnp.zeros((L, dh), pdt),
+        },
+        "classifier": (s_h * jax.random.normal(k[3], (dh, cfg.n_classes), jnp.float32)).astype(pdt),
+    }
+
+
+def _gin_layer(h, lp, src, dst, n, edge_w=None, agg_mode="segment"):
+    """h' = MLP((1+eps)·h + Σ_{j→i} h_j). Sum aggregator (GIN)."""
+    msgs = jnp.take(h, src, axis=0)
+    if edge_w is not None:
+        msgs = msgs * edge_w[:, None]
+    if agg_mode == "onehot":
+        # scatter-as-matmul: SPMD partitions einsums cleanly where batched
+        # scatters fall back to replicate+all-reduce (§Perf gin finding)
+        onehot = jax.nn.one_hot(dst, n, dtype=msgs.dtype)   # (E, n)
+        agg = jnp.einsum("ef,en->nf", msgs, onehot)
+    else:
+        agg = jax.ops.segment_sum(msgs, dst, num_segments=n)
+    z = (1.0 + lp["eps"]) * h + agg
+    z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+    return jax.nn.relu(z @ lp["w2"] + lp["b2"])
+
+
+def gin_forward(params, x, src, dst, edge_w=None):
+    """Full-graph forward: x (N, d_in) -> node embeddings (N, d_hidden)."""
+    n = x.shape[0]
+    h = x @ params["encoder"]
+
+    def body(h, lp):
+        return _gin_layer(h, lp, src, dst, n, edge_w), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return h
+
+
+def gin_node_logits(params, x, src, dst):
+    return gin_forward(params, x, src, dst) @ params["classifier"]
+
+
+def gin_graph_logits(params, x, src, dst, node_mask, edge_mask):
+    """Single padded graph -> graph-level logits (masked-sum readout)."""
+    h = gin_forward(params, x * node_mask[:, None], src, dst,
+                    edge_w=edge_mask.astype(x.dtype))
+    readout = jnp.sum(h * node_mask[:, None], axis=0)
+    return readout @ params["classifier"]
+
+
+gin_graph_logits_batched = jax.vmap(gin_graph_logits, in_axes=(None, 0, 0, 0, 0, 0))
+
+
+def gin_sampled_logits(params, feats, edge_src, edge_dst, edge_mask,
+                       n_seeds: int, agg_mode: str = "segment"):
+    """Sampled-subgraph forward; logits for the first ``n_seeds`` nodes."""
+    n = feats.shape[0]
+    h = feats @ params["encoder"]
+
+    def body(h, lp):
+        return _gin_layer(h, lp, edge_src, edge_dst, n,
+                          edge_w=edge_mask.astype(h.dtype),
+                          agg_mode=agg_mode), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return h[:n_seeds] @ params["classifier"]
+
+
+def gin_sampled_batched_loss(params, batch, cfg: GINConfig, n_seeds: int):
+    """Natively-batched sampled forward over (G, n, f) subgraph tensors.
+
+    Unlike vmap(gin_sampled_logits), the group dim G stays visible to SPMD,
+    so the layer-scan carry can be sharding-hinted — without it XLA
+    replicates the carry and all-gathers the hidden state every layer
+    (§Perf gin finding #2). Aggregation per cfg.agg.
+    """
+    feats, src, dst = batch["feats"], batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"]
+    g, n, _ = feats.shape
+    h = feats @ params["encoder"]
+    axes = (("pod", "data", "model"),)
+
+    def body(h, lp):
+        h = shard_hint(h, axes[0], None, None)
+        if cfg.agg == "onehot":
+            # gather AND scatter as einsums: the AD transpose of a one-hot
+            # matmul is another one-hot matmul — no scatter anywhere, so
+            # SPMD never hits the batched-scatter replicate+all-reduce
+            # fallback (fwd OR bwd)
+            oh_src = jax.nn.one_hot(src, n, dtype=h.dtype)       # (G,E,n)
+            oh_dst = jax.nn.one_hot(dst, n, dtype=h.dtype)
+            msgs = jnp.einsum("gnf,gen->gef", h, oh_src)
+            msgs = msgs * emask[:, :, None].astype(h.dtype)
+            agg = jnp.einsum("gef,gen->gnf", msgs, oh_dst)
+        else:
+            msgs = jnp.take_along_axis(h, src[:, :, None], axis=1)  # (G,E,dh)
+            msgs = msgs * emask[:, :, None].astype(h.dtype)
+
+            def seg(m, d):
+                return jax.ops.segment_sum(m, d, num_segments=n)
+            agg = jax.vmap(seg)(msgs, dst)
+        z = (1.0 + lp["eps"]) * h + agg
+        z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+        z = jax.nn.relu(z @ lp["w2"] + lp["b2"])
+        return shard_hint(z, axes[0], None, None), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    logits = h[:, :n_seeds] @ params["classifier"]               # (G,S,C)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(
+        logp, batch["labels"][:, :, None], axis=-1))
+
+
+def node_loss(params, batch, cfg: GINConfig):
+    logits = gin_node_logits(params, batch["x"],
+                             shard_hint(batch["src"], DP),
+                             shard_hint(batch["dst"], DP))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch.get("train_mask", jnp.ones_like(nll))
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def graph_loss(params, batch, cfg: GINConfig):
+    logits = gin_graph_logits_batched(params, batch["x"], batch["src"],
+                                      batch["dst"], batch["node_mask"],
+                                      batch["edge_mask"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1))
+
+
+def sampled_loss(params, batch, cfg: GINConfig):
+    logits = gin_sampled_logits(params, batch["feats"], batch["edge_src"],
+                                batch["edge_dst"], batch["edge_mask"],
+                                batch["n_seeds"], agg_mode=cfg.agg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1))

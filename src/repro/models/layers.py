@@ -1,0 +1,168 @@
+"""Shared neural layers: RMSNorm, RoPE, memory-bounded (flash-style) causal
+attention via online softmax over KV chunks, and vocab-chunked cross
+entropy. All pure functions over explicit param pytrees."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x, positions, base=10000.0):
+    """x: (..., S, H, dh) with dh even; positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attend_chunk(q, kc, vc, qpos, kpos, scale, causal, window):
+    """q: (B,Sq,Hkv,G,dh); kc/vc: (B,C,Hkv,dh). Returns (scores_exp-weighted
+    partials) for online softmax."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    dpos = qpos[:, None] - kpos[None, :]                 # (Sq, C)
+    mask = jnp.broadcast_to(kpos[None, :] < 2**29, dpos.shape)  # pad validity
+    if causal:
+        mask = jnp.logical_and(mask, dpos >= 0)
+    if window is not None:
+        mask = jnp.logical_and(mask, dpos < window)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                              # (B,Sq,Hkv,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(jnp.isfinite(m)[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+    m = jnp.where(jnp.isfinite(m), m, -1e30)
+    return m, l, o
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, chunk=1024,
+                      q_offset=0):
+    """Flash-style attention: online softmax over KV chunks, O(S·C) memory.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh) with H = Hkv * G (GQA).
+    Returns (B, Sq, H, dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    nchunks = -(-skv // chunk)
+    pad = nchunks * chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos_full = jnp.arange(nchunks * chunk)
+    kpos_full = jnp.where(kpos_full < skv, kpos_full, 2**30)  # mask padding
+    qpos = q_offset + jnp.arange(sq)
+    kc = kp.reshape(b, nchunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nchunks, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    kposc = kpos_full.reshape(nchunks, chunk)
+
+    def body(carry, xs):
+        m, l, o = carry
+        kci, vci, kpi = xs
+        mi, li, oi = _attend_chunk(qg, kci, vci, qpos, kpi, scale, causal, window)
+        m_new = jnp.maximum(m, mi)
+        alpha = jnp.exp(m - m_new)
+        beta = jnp.exp(mi - m_new)
+        l_new = l * alpha + li * beta
+        o_new = o * alpha[..., None] + oi * beta[..., None]
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    o0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kc, vc, kposc))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, length=None, window=None):
+    """Single-position attention against a full cache.
+
+    q: (B, H, dh); caches: (B, S, Hkv, dh). ``length``: current cache fill
+    (positions >= length masked). Returns (B, H, dh).
+    """
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = jnp.ones((s,), bool) if length is None else pos < length
+    if window is not None and length is not None:
+        mask = jnp.logical_and(mask, pos >= length - window)
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def mlp_swiglu(x, w1, w3, w2):
+    return jnp.einsum("...f,fd->...d",
+                      jax.nn.silu(jnp.einsum("...d,df->...f", x, w1))
+                      * jnp.einsum("...d,df->...f", x, w3), w2)
+
+
+def dense_mlp(x, ws, bs=None, act=jax.nn.relu, final_act=False):
+    """Plain MLP: ws list of (d_in, d_out)."""
+    for i, w in enumerate(ws):
+        x = x @ w
+        if bs is not None:
+            x = x + bs[i]
+        if i < len(ws) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def chunked_softmax_xent(h, unembed, labels, chunk=16384):
+    """Cross entropy without materializing full (T, V) logits.
+
+    h: (T, d); unembed: (d, V); labels: (T,). Scans vocab chunks with a
+    checkpointed body (logits recomputed in backward). Returns mean loss.
+    """
+    t, d = h.shape
+    v = unembed.shape[1]
+    nchunks = -(-v // chunk)
+    vpad = nchunks * chunk - v
+    w = jnp.pad(unembed, ((0, 0), (0, vpad)))
+    wc = w.reshape(d, nchunks, chunk).transpose(1, 0, 2)  # (nc, d, chunk)
+    hf = h.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l = carry
+        wci, ci = xs
+        logits = hf @ wci.astype(jnp.float32)             # (T, chunk)
+        col = ci * chunk + jnp.arange(chunk)
+        logits = jnp.where((col < v)[None, :], logits, -jnp.inf)
+        mi = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, mi)
+        l_new = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1)
+        return (m_new, l_new), None
+
+    m0 = jnp.full((t,), -1e30, jnp.float32)
+    l0 = jnp.zeros((t,), jnp.float32)
+    (m, l), _ = jax.lax.scan(body, (m0, l0), (wc, jnp.arange(nchunks)))
+    # target logit: rows of unembed.T gathered by label
+    w_tgt = jnp.take(unembed.T, labels, axis=0).astype(jnp.float32)  # (T, d)
+    tgt = jnp.sum(hf * w_tgt, axis=-1)
+    logz = m + jnp.log(jnp.maximum(l, 1e-30))
+    return jnp.mean(logz - tgt)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (MegaBlocks-style
+grouping adapted to static TPU shapes).
+
+Dispatch: top-k routing → flatten (token, k) assignments → stable-sort by
+expert → position-within-expert via searchsorted → scatter into a static
+(E, C, d) buffer with ``mode='drop'`` for over-capacity tokens → grouped
+expert GEMMs → gather + weighted combine. Everything is static-shaped, so
+it lowers cleanly under pjit; the (E, C, d) buffer is the expert-parallel
+sharding surface (E over "model" when E >= mesh model size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import DP, shard_hint
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor) + 1
+    return max(8, -(-c // 8) * 8)  # pad to 8 for TPU lane alignment
+
+
+def moe_ffn(x, router_w, w1, w3, w2, *, top_k: int, capacity_factor: float,
+            ep_on_model: bool, c_shard_dp: bool = False):
+    """x: (T, d) -> (T, d), plus aux load-balancing loss.
+
+    router_w: (d, E); w1/w3: (E, d, fe); w2: (E, fe, d).
+    """
+    t, d = x.shape
+    e = router_w.shape[1]
+    c = moe_capacity(t, e, top_k, capacity_factor)
+
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, top_k)                       # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(gates, axis=0)
+    ce_frac = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        jnp.ones((t * top_k,), jnp.float32)) / (t * top_k)
+    aux = e * jnp.sum(ce_frac * me)
+
+    flat_e = topi.reshape(-1)                                      # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_s = flat_e[order]
+    t_s = flat_t[order]
+    w_s = flat_w[order]
+    starts = jnp.searchsorted(e_s, jnp.arange(e, dtype=e_s.dtype))
+    pos = jnp.arange(t * top_k, dtype=jnp.int32) - starts[e_s].astype(jnp.int32)
+
+    if ep_on_model:
+        # capacity over DP keeps the (E, C, d) buffer fully distributed —
+        # without it the buffer replicates across the data axis and the
+        # dispatch scatter all-gathers it (the §Perf deepseek-v2 finding)
+        espec = ("model", DP if c_shard_dp else None, None)
+    else:
+        espec = (None, DP, None)
+    buf = jnp.zeros((e, c, d), x.dtype)
+    buf = buf.at[e_s, pos].set(jnp.take(x, t_s, axis=0), mode="drop")
+    buf = shard_hint(buf, *espec)
+
+    up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) * \
+        jnp.einsum("ecd,edf->ecf", buf, w3)
+    y = jnp.einsum("ecf,efd->ecd", up, w2)
+    y = shard_hint(y, *espec)
+
+    y_tok = y.at[e_s, pos].get(mode="fill", fill_value=0)          # (T*k, d)
+    keep = (pos < c)[:, None].astype(y_tok.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[t_s].add(
+        y_tok * keep * w_s[:, None].astype(y.dtype))
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn_vsharded(x, router_w, w1, w3, w2, *, top_k: int,
+                     capacity_factor: float, n_virtual_shards: int):
+    """Virtual-shard dispatch: reshape tokens to (D, T/D, d) with D sharded
+    over DP and vmap the sort/scatter per shard. Every data-dependent op
+    (argsort, scatter, gather) becomes batch-parallel — SPMD never crosses
+    shards for dispatch; only the expert einsum communicates (EP over
+    "model"). This is the §Perf fix for the deepseek-v2 train cell, where
+    global-argsort dispatch forced terabyte-scale all-reduces.
+
+    Per-shard capacity (standard GShard semantics): C_loc = ceil(T_loc * k
+    / E * cf). Slightly different drop pattern than global dispatch; same
+    expectation.
+    """
+    t, d = x.shape
+    e = router_w.shape[1]
+    dvs = n_virtual_shards
+    t_loc = t // dvs
+    c = moe_capacity(t_loc, e, top_k, capacity_factor)
+    xg = x.reshape(dvs, t_loc, d)
+    xg = shard_hint(xg, DP, None, None)
+
+    def dispatch_one(xs):
+        logits = xs.astype(jnp.float32) @ router_w.astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        topw, topi = jax.lax.top_k(gates, top_k)
+        topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+        me = jnp.mean(gates, axis=0)
+        ce_frac = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+            jnp.ones((t_loc * top_k,), jnp.float32)) / (t_loc * top_k)
+        aux = e * jnp.sum(ce_frac * me)
+        flat_e = topi.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32), top_k)
+        flat_w = topw.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_s, t_s, w_s = flat_e[order], flat_t[order], flat_w[order]
+        starts = jnp.searchsorted(e_s, jnp.arange(e, dtype=e_s.dtype))
+        pos = jnp.arange(t_loc * top_k, dtype=jnp.int32) - \
+            starts[e_s].astype(jnp.int32)
+        buf = jnp.zeros((e, c, d), xs.dtype)
+        buf = buf.at[e_s, pos].set(jnp.take(xs, t_s, axis=0), mode="drop")
+        return buf, (e_s, pos, t_s, w_s, aux)
+
+    bufs, (e_s, pos, t_s, w_s, auxs) = jax.vmap(dispatch_one)(xg)
+    bufs = shard_hint(bufs, DP, "model", None, None)   # (D, E, C, d)
+    up = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bufs, w1)) * \
+        jnp.einsum("gecd,edf->gecf", bufs, w3)
+    y = jnp.einsum("gecf,efd->gecd", up, w2)
+    y = shard_hint(y, DP, "model", None, None)
+
+    def combine_one(yb, e_s, pos, t_s, w_s):
+        y_tok = yb.at[e_s, pos].get(mode="fill", fill_value=0)
+        keep = (pos < c)[:, None].astype(y_tok.dtype)
+        return jnp.zeros((t_loc, d), yb.dtype).at[t_s].add(
+            y_tok * keep * w_s[:, None].astype(yb.dtype))
+
+    out = jax.vmap(combine_one)(y, e_s, pos, t_s, w_s)
+    return out.reshape(t, d).astype(x.dtype), jnp.mean(auxs)

@@ -1,0 +1,457 @@
+"""Scanned-layer decoder-only transformer: dense / GQA / MLA / SWA / MoE.
+
+One model definition covers all five assigned LM architectures. Layers are
+stacked (leading L dim) and executed with lax.scan + optional remat, so the
+HLO stays one-layer-sized regardless of depth (essential for multi-pod
+compile times). Sharding: Megatron TP over "model", DP over ("pod","data"),
+optional ZeRO-3/FSDP over "data" for >=70B configs, expert-parallel over
+"model" when E >= mesh model size, sequence-sharded KV caches for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .layers import (chunked_attention, chunked_softmax_xent,
+                     decode_attention, mlp_swiglu, rms_norm, rope)
+from .moe import moe_ffn
+from .sharding import DP, shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"          # "gqa" | "mla"
+    window: Optional[int] = None    # SWA window (None = full attention)
+    # MLA dims (DeepSeek-V2)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    mlp_type: str = "swiglu"        # "swiglu" (3 mats) | "relu2" (2 mats)
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"      # "full" | "dots" (save matmul outputs)
+    fsdp: bool = False
+    moe_c_shard_dp: bool = False    # shard MoE dispatch capacity over DP
+    moe_virtual_shards: int = 0     # per-shard dispatch (see moe_ffn_vsharded)
+    attn_chunk: int = 1024
+    vocab_chunk: int = 16384
+    rope_base: float = 10000.0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_params(self) -> int:
+        """Exact parameter count (for MODEL_FLOPS and memory accounting)."""
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(self, jax.random.key(0)))))
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE counts top_k + shared experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        shp = jax.eval_shape(lambda: init_params(self, jax.random.key(0)))
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shp)[0]:
+            keys = "/".join(str(p) for p in path)
+            n = int(np.prod(leaf.shape))
+            if "experts" in keys:
+                n = n * self.top_k // self.n_experts
+            total += n
+        return total
+
+
+# --------------------------------------------------------------------- init
+def _norm(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_params(cfg: TransformerConfig, key):
+    pdt = cfg.pdt()
+    L, d, H, Hkv, dh = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                        cfg.n_kv_heads, cfg.d_head)
+    ks = iter(jax.random.split(key, 32))
+    if cfg.attn_type == "mla":
+        attn = {
+            "w_dq": _norm(next(ks), (L, d, cfg.q_lora_rank), pdt)
+            if cfg.q_lora_rank else None,
+            "w_uq": _norm(next(ks), (L, cfg.q_lora_rank or d, H, cfg.qk_dim), pdt),
+            "w_dkv": _norm(next(ks), (L, d, cfg.kv_lora_rank + cfg.qk_rope_dim), pdt),
+            "w_uk": _norm(next(ks), (L, cfg.kv_lora_rank, H, cfg.qk_nope_dim), pdt),
+            "w_uv": _norm(next(ks), (L, cfg.kv_lora_rank, H, cfg.v_head_dim), pdt),
+            "wo": _norm(next(ks), (L, H, cfg.v_head_dim, d), pdt),
+        }
+        attn = {k: v for k, v in attn.items() if v is not None}
+    else:
+        attn = {
+            "wq": _norm(next(ks), (L, d, H, dh), pdt),
+            "wk": _norm(next(ks), (L, d, Hkv, dh), pdt),
+            "wv": _norm(next(ks), (L, d, Hkv, dh), pdt),
+            "wo": _norm(next(ks), (L, H, dh, d), pdt),
+        }
+    if cfg.is_moe:
+        fe = cfg.d_expert or cfg.d_ff
+        ffn = {
+            "router": _norm(next(ks), (L, d, cfg.n_experts), jnp.float32),
+            "experts_w1": _norm(next(ks), (L, cfg.n_experts, d, fe), pdt),
+            "experts_w3": _norm(next(ks), (L, cfg.n_experts, d, fe), pdt),
+            "experts_w2": _norm(next(ks), (L, cfg.n_experts, fe, d), pdt),
+        }
+        if cfg.n_shared:
+            fs = cfg.n_shared * fe
+            ffn.update({
+                "shared_w1": _norm(next(ks), (L, d, fs), pdt),
+                "shared_w3": _norm(next(ks), (L, d, fs), pdt),
+                "shared_w2": _norm(next(ks), (L, fs, d), pdt),
+            })
+    elif cfg.mlp_type == "relu2":
+        ffn = {
+            "w1": _norm(next(ks), (L, d, cfg.d_ff), pdt),
+            "w2": _norm(next(ks), (L, cfg.d_ff, d), pdt),
+        }
+    else:
+        ffn = {
+            "w1": _norm(next(ks), (L, d, cfg.d_ff), pdt),
+            "w3": _norm(next(ks), (L, d, cfg.d_ff), pdt),
+            "w2": _norm(next(ks), (L, cfg.d_ff, d), pdt),
+        }
+    return {
+        "embed": _norm(next(ks), (cfg.vocab, d), pdt),
+        "layers": {
+            "ln1": jnp.ones((L, d), pdt),
+            "ln2": jnp.ones((L, d), pdt),
+            "attn": attn,
+            "ffn": ffn,
+        },
+        "final_ln": jnp.ones((d,), pdt),
+        "unembed": _norm(next(ks), (d, cfg.vocab), pdt),
+    }
+
+
+# ----------------------------------------------------------------- sharding
+def param_specs(cfg: TransformerConfig):
+    """Logical PartitionSpecs (filtered against the mesh at lower time)."""
+    fs = "data" if cfg.fsdp else None
+    ep_on_model = cfg.is_moe and cfg.n_experts >= 16
+    if cfg.attn_type == "mla":
+        attn = {
+            "w_uq": P(None, fs, "model", None),
+            "w_dkv": P(None, fs, None),
+            "w_uk": P(None, fs, "model", None),
+            "w_uv": P(None, fs, "model", None),
+            "wo": P(None, "model", None, fs),
+        }
+        if cfg.q_lora_rank:
+            attn["w_dq"] = P(None, fs, None)
+    else:
+        attn = {
+            "wq": P(None, fs, "model", None),
+            "wk": P(None, fs, "model", None) if cfg.n_kv_heads >= 16
+            else P(None, fs, None, None),
+            "wv": P(None, fs, "model", None) if cfg.n_kv_heads >= 16
+            else P(None, fs, None, None),
+            "wo": P(None, "model", None, fs),
+        }
+    if cfg.is_moe:
+        if ep_on_model:
+            ffn = {
+                "router": P(None, fs, None),
+                "experts_w1": P(None, "model", fs, None),
+                "experts_w3": P(None, "model", fs, None),
+                "experts_w2": P(None, "model", None, fs),
+            }
+        else:
+            ffn = {
+                "router": P(None, fs, None),
+                "experts_w1": P(None, None, fs, "model"),
+                "experts_w3": P(None, None, fs, "model"),
+                "experts_w2": P(None, None, "model", fs),
+            }
+        if cfg.n_shared:
+            ffn.update({
+                "shared_w1": P(None, fs, "model"),
+                "shared_w3": P(None, fs, "model"),
+                "shared_w2": P(None, "model", fs),
+            })
+    elif cfg.mlp_type == "relu2":
+        ffn = {
+            "w1": P(None, fs, "model"),
+            "w2": P(None, "model", fs),
+        }
+    else:
+        ffn = {
+            "w1": P(None, fs, "model"),
+            "w3": P(None, fs, "model"),
+            "w2": P(None, "model", fs),
+        }
+    return {
+        "embed": P("model", fs),
+        "layers": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": attn,
+            "ffn": ffn,
+        },
+        "final_ln": P(None),
+        "unembed": P(fs, "model"),
+    }
+
+
+# ------------------------------------------------------------------ forward
+def _attention_block(x, ap, cfg: TransformerConfig, positions):
+    b, s, d = x.shape
+    cdt = cfg.cdt()
+    if cfg.attn_type == "mla":
+        if cfg.q_lora_rank:
+            cq = jnp.einsum("bsd,dr->bsr", x, ap["w_dq"].astype(cdt))
+            q = jnp.einsum("bsr,rhk->bshk", cq, ap["w_uq"].astype(cdt))
+        else:
+            q = jnp.einsum("bsd,dhk->bshk", x, ap["w_uq"].astype(cdt))
+        q = shard_hint(q, DP, None, "model", None)
+        qn, qr = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+        qr = rope(qr, positions, cfg.rope_base)
+        ckv_full = jnp.einsum("bsd,dr->bsr", x, ap["w_dkv"].astype(cdt))
+        ckv = ckv_full[..., :cfg.kv_lora_rank]
+        kr = rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                  positions, cfg.rope_base)                    # (B,S,1,rope)
+        kn = jnp.einsum("bsr,rhn->bshn", ckv, ap["w_uk"].astype(cdt))
+        kn = shard_hint(kn, DP, None, "model", None)
+        v = jnp.einsum("bsr,rhn->bshn", ckv, ap["w_uv"].astype(cdt))
+        v = shard_hint(v, DP, None, "model", None)
+        q_full = jnp.concatenate([qn, qr], axis=-1)
+        k_full = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr, kn.shape[:-1] + (cfg.qk_rope_dim,))],
+            axis=-1)
+        out = chunked_attention(q_full, k_full, v, causal=True,
+                                window=cfg.window, chunk=cfg.attn_chunk)
+        return jnp.einsum("bshv,hvd->bsd", out, ap["wo"].astype(cdt))
+    # GQA
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"].astype(cdt))
+    q = shard_hint(q, DP, None, "model", None)
+    q = rope(q, positions, cfg.rope_base)
+    k = rope(k, positions, cfg.rope_base)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            chunk=cfg.attn_chunk)
+    return jnp.einsum("bshv,hvd->bsd", out, ap["wo"].astype(cdt))
+
+
+def _ffn_block(x, fp, cfg: TransformerConfig):
+    b, s, d = x.shape
+    cdt = cfg.cdt()
+    if not cfg.is_moe:
+        if cfg.mlp_type == "relu2":
+            z = jnp.square(jax.nn.relu(
+                jnp.einsum("...d,df->...f", x, fp["w1"].astype(cdt))))
+            return jnp.einsum("...f,fd->...d", z, fp["w2"].astype(cdt)), 0.0
+        return mlp_swiglu(x, fp["w1"].astype(cdt), fp["w3"].astype(cdt),
+                          fp["w2"].astype(cdt)), 0.0
+    xt = x.reshape(b * s, d)
+    if cfg.moe_virtual_shards > 1:
+        from .moe import moe_ffn_vsharded
+        out, aux = moe_ffn_vsharded(
+            xt, fp["router"], fp["experts_w1"].astype(cdt),
+            fp["experts_w3"].astype(cdt), fp["experts_w2"].astype(cdt),
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            n_virtual_shards=cfg.moe_virtual_shards)
+    else:
+        out, aux = moe_ffn(xt, fp["router"], fp["experts_w1"].astype(cdt),
+                           fp["experts_w3"].astype(cdt),
+                           fp["experts_w2"].astype(cdt),
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           ep_on_model=cfg.n_experts >= 16,
+                           c_shard_dp=cfg.moe_c_shard_dp)
+    out = out.reshape(b, s, d)
+    if cfg.n_shared:
+        out = out + mlp_swiglu(x, fp["shared_w1"].astype(cdt),
+                               fp["shared_w3"].astype(cdt),
+                               fp["shared_w2"].astype(cdt))
+    return out, aux
+
+
+def _layer(x_aux, lp, cfg: TransformerConfig, positions):
+    x, aux = x_aux
+    h = rms_norm(x, lp["ln1"].astype(cfg.cdt()))
+    x = x + _attention_block(h, lp["attn"], cfg, positions)
+    h = rms_norm(x, lp["ln2"].astype(cfg.cdt()))
+    f, aux_l = _ffn_block(h, lp["ffn"], cfg)
+    x = shard_hint(x + f, DP, None, None)
+    return (x, aux + aux_l), None
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens (B, S) -> final hidden states (B, S, d) in compute dtype."""
+    cdt = cfg.cdt()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = shard_hint(x, DP, None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        return _layer(carry, lp, cfg, positions)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.array(0.0, jnp.float32)),
+                               params["layers"])
+    x = rms_norm(x, params["final_ln"].astype(cdt))
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, aux_weight: float = 0.01):
+    x, aux = forward(params, batch["tokens"], cfg)
+    b, s, d = x.shape
+    ce = chunked_softmax_xent(x.reshape(b * s, d),
+                              params["unembed"].astype(cfg.cdt()),
+                              batch["labels"].reshape(-1),
+                              chunk=cfg.vocab_chunk)
+    return ce + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """KV cache pytree. GQA: (L,B,S,Hkv,dh) k/v (rolling buffer when SWA);
+    MLA: compressed (L,B,S,kv_lora) + (L,B,S,rope)."""
+    cdt = cfg.cdt()
+    s = min(max_len, cfg.window) if cfg.window else max_len
+    if cfg.attn_type == "mla":
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, batch, s, cfg.kv_lora_rank), cdt),
+            "kr": jnp.zeros((cfg.n_layers, batch, s, cfg.qk_rope_dim), cdt),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.d_head), cdt),
+        "v": jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.d_head), cdt),
+    }
+
+
+def cache_specs(cfg: TransformerConfig):
+    """Sequence dim sharded over "model" (cache SP) unless SWA rolling."""
+    sdim = None if cfg.window else "model"
+    if cfg.attn_type == "mla":
+        return {"ckv": P(None, DP, sdim, None), "kr": P(None, DP, sdim, None)}
+    return {"k": P(None, DP, sdim, None, None),
+            "v": P(None, DP, sdim, None, None)}
+
+
+def _decode_layer_gqa(x, lp, cache_l, pos, slot, cfg):
+    cdt = cfg.cdt()
+    b, d = x.shape
+    h = rms_norm(x, lp["ln1"].astype(cdt))
+    ap = lp["attn"]
+    q = jnp.einsum("bd,dhk->bhk", h, ap["wq"].astype(cdt))
+    k = jnp.einsum("bd,dhk->bhk", h, ap["wk"].astype(cdt))
+    v = jnp.einsum("bd,dhk->bhk", h, ap["wv"].astype(cdt))
+    posv = jnp.full((b,), pos)
+    q = rope(q[:, None], posv[:, None], cfg.rope_base)[:, 0]
+    k = rope(k[:, None], posv[:, None], cfg.rope_base)[:, 0]
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k[:, None], slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v[:, None], slot, axis=1)
+    length = jnp.minimum(pos + 1, kc.shape[1])
+    out = decode_attention(q, kc, vc, length=length,
+                           window=None)  # rolling buffer already bounds SWA
+    x = x + jnp.einsum("bhv,hvd->bd", out, ap["wo"].astype(cdt))
+    h2 = rms_norm(x, lp["ln2"].astype(cdt))
+    f, _ = _ffn_block(h2[:, None], lp["ffn"], cfg)
+    x = x + f[:, 0]
+    return x, {"k": kc, "v": vc}
+
+
+def _decode_layer_mla(x, lp, cache_l, pos, slot, cfg):
+    """MLA decode with the absorbed-matmul trick: scores and values live in
+    the compressed kv_lora space; w_uk/w_uv are absorbed into q/out."""
+    cdt = cfg.cdt()
+    b, d = x.shape
+    h = rms_norm(x, lp["ln1"].astype(cdt))
+    ap = lp["attn"]
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bd,dr->br", h, ap["w_dq"].astype(cdt))
+        q = jnp.einsum("br,rhk->bhk", cq, ap["w_uq"].astype(cdt))
+    else:
+        q = jnp.einsum("bd,dhk->bhk", h, ap["w_uq"].astype(cdt))
+    qn, qr = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    posv = jnp.full((b,), pos)
+    qr = rope(qr[:, None], posv[:, None], cfg.rope_base)[:, 0]    # (B,H,rope)
+    ckv_new_full = jnp.einsum("bd,dr->br", h, ap["w_dkv"].astype(cdt))
+    ckv_new = ckv_new_full[:, :cfg.kv_lora_rank]
+    kr_new = rope(ckv_new_full[:, None, None, cfg.kv_lora_rank:],
+                  posv[:, None], cfg.rope_base)[:, 0, 0]          # (B,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["ckv"], ckv_new[:, None], slot, axis=1)
+    krc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["kr"], kr_new[:, None], slot, axis=1)
+    # absorb w_uk into q: q_lat (B,H,kvr)
+    q_lat = jnp.einsum("bhn,rhn->bhr", qn, ap["w_uk"].astype(cdt))
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.qk_dim))
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         ckv.astype(jnp.float32)) +
+              jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                         krc.astype(jnp.float32))) * scale
+    length = jnp.minimum(pos + 1, ckv.shape[1])
+    mask = jnp.arange(ckv.shape[1]) < length
+    scores = jnp.where(mask[None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, ckv.astype(jnp.float32)).astype(cdt)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, ap["w_uv"].astype(cdt))
+    x = x + jnp.einsum("bhv,hvd->bd", out, ap["wo"].astype(cdt))
+    h2 = rms_norm(x, lp["ln2"].astype(cdt))
+    f, _ = _ffn_block(h2[:, None], lp["ffn"], cfg)
+    x = x + f[:, 0]
+    return x, {"ckv": ckv, "kr": krc}
+
+
+def decode_step(params, cache, tokens, pos, cfg: TransformerConfig):
+    """One decode step. tokens: (B,) int32; pos: scalar int32 (current
+    position, same for the whole batch). Returns (logits (B, V), new cache).
+    """
+    cdt = cfg.cdt()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    slot = pos % cache[list(cache)[0]].shape[2] if cfg.window else pos
+    layer_fn = _decode_layer_mla if cfg.attn_type == "mla" else _decode_layer_gqa
+
+    def body(x, lp_cache):
+        lp, cache_l = lp_cache
+        x, new_cache_l = layer_fn(x, lp, cache_l, pos, slot, cfg)
+        return x, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_ln"].astype(cdt))
+    logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cdt))
+    return logits, new_cache

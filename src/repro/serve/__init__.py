@@ -1,0 +1,2 @@
+from .kvquant import (dequantize_kv, init_quant_cache, quant_decode_attention,
+                      quantize_kv, update_quant_cache)

@@ -1,0 +1,52 @@
+"""int8-quantized KV cache for decode (the §Roofline decode-cell lever).
+
+Per-(position, head) symmetric int8 quantization: k/v stored int8 with a
+per-row fp scale. Decode attention dequantizes on the fly — cache HBM
+traffic (the decode bottleneck) drops ~2x vs bf16 / ~4x vs fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x, axis: int = -1):
+    """x: (..., dh) -> (int8 values, fp32 scales broadcastable over axis)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                    keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_quant_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
+                     dh: int):
+    return {
+        "k_q": jnp.zeros((n_layers, batch, max_len, n_kv, dh), jnp.int8),
+        "k_s": jnp.zeros((n_layers, batch, max_len, n_kv, 1), jnp.float32),
+        "v_q": jnp.zeros((n_layers, batch, max_len, n_kv, dh), jnp.int8),
+        "v_s": jnp.zeros((n_layers, batch, max_len, n_kv, 1), jnp.float32),
+    }
+
+
+def update_quant_cache(cache_l, k_new, v_new, slot):
+    """Insert one position (B, n_kv, dh) at ``slot``."""
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val[:, None], slot, axis=1)
+    return {
+        "k_q": upd(cache_l["k_q"], kq), "k_s": upd(cache_l["k_s"], ks),
+        "v_q": upd(cache_l["v_q"], vq), "v_s": upd(cache_l["v_s"], vs),
+    }
+
+
+def quant_decode_attention(q, cache_l, length):
+    """q: (B, H, dh) against an int8 cache layer; returns (B, H, dh)."""
+    from ..models.layers import decode_attention
+    k = dequantize_kv(cache_l["k_q"], cache_l["k_s"])
+    v = dequantize_kv(cache_l["v_q"], cache_l["v_s"])
+    return decode_attention(q, k, v, length=length)

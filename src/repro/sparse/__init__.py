@@ -1,0 +1,3 @@
+from .spmv import normalize_l1, residual_l1, spmv_dst, spmv_src
+
+__all__ = ["normalize_l1", "residual_l1", "spmv_dst", "spmv_src"]

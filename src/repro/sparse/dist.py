@@ -1,0 +1,295 @@
+"""Distributed HITS/ranking sweeps under shard_map.
+
+Edge-sharding strategies with different collective costs per sweep
+(per-device bytes, vector length N, S shards):
+
+* ``replicated``   — edges round-robin sharded; both half-steps end in a
+                     full-vector psum (all-reduce). Cost ≈ 4N (2 all-reduce,
+                     all-reduce moves ~2 bytes/byte).
+* ``dual_blocked`` — two edge partitions (by dst block for the authority
+                     step, by src block for the hub step); both half-steps
+                     scatter only into the owner's block, combine = 2
+                     all-gathers. Cost ≈ 2N.
+
+The §Perf hillclimb for the ranking workload walks exactly this ladder.
+All variants compute the same fixed point (tests assert vs the
+single-device sweep).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..graph.partition import partition_edges, partition_edges_by_dst_block
+from ..graph.structure import Graph
+
+
+def _seg_sum(x_g, idx, n):
+    return jax.ops.segment_sum(x_g, idx, num_segments=n)
+
+
+def _mul(v, c):
+    """v: (N,) or (N, V); c: None or (N,) — broadcast c over V."""
+    if c is None:
+        return v
+    return v * (c[:, None] if v.ndim == 2 else c)
+
+
+def build_edge_shards(g: Graph, n_shards: int, mode: str = "replicated"):
+    """Host-side partition. Returns dict of (S, E_loc) arrays (+ metadata)."""
+    if mode == "replicated":
+        parts = partition_edges(g, n_shards)
+        parts["mode"] = "replicated"
+        return parts
+    if mode == "dual_blocked":
+        a_part = partition_edges_by_dst_block(g, n_shards)
+        h_part = partition_edges_by_dst_block(g.reverse(), n_shards)
+        # reverse() swaps src/dst: h_part's "dst" is the original src, so the
+        # hub step scatters block-locally.
+        return {"mode": "dual_blocked", "a": a_part, "h": h_part,
+                "n_block": a_part["n_block"]}
+    if mode == "dual_blocked_compact":
+        # hub vectors live in the reordered non-dangling space (dangling
+        # pages have zero hub score — never ship them; paper-reordering
+        # fused into the distributed layout, §Perf C3)
+        dang = g.dangling_mask()
+        nd_ids = np.nonzero(~dang)[0].astype(np.int32)
+        remap = np.full(g.n_nodes, -1, np.int32)
+        remap[nd_ids] = np.arange(len(nd_ids), dtype=np.int32)
+        src_c = remap[g.src]
+        assert (src_c >= 0).all()
+        a_part = partition_edges_by_dst_block(
+            Graph(g.n_nodes, src_c, g.dst), n_shards)  # src in compact space
+        h_part = partition_edges_by_dst_block(
+            Graph(len(nd_ids), g.dst, src_c), n_shards)  # blocked by src_c
+        return {"mode": "dual_blocked_compact", "a": a_part, "h": h_part,
+                "n_block": a_part["n_block"], "nb_h": h_part["n_block"],
+                "nd_ids": nd_ids, "n_hub": len(nd_ids)}
+    raise ValueError(mode)
+
+
+def _flat_axis_index(axes):
+    """Flattened shard index across possibly-multiple mesh axes."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def make_dist_hits_sweep(mesh, shards, n: int, axes=("data",),
+                         ca: Optional[np.ndarray] = None,
+                         ch: Optional[np.ndarray] = None,
+                         dtype=jnp.float32):
+    """Return (sweep_fn, h0, device_args) for the given strategy.
+
+    sweep_fn(h, *device_args) -> (h_next_normalized, a); call under jit with
+    the mesh active. ``h`` layout depends on the mode (full vs blocked).
+    """
+    mode = shards["mode"]
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    ax = axes if len(axes) > 1 else axes[0]
+    espec = P(ax, None)
+
+    ca_j = None if ca is None else jnp.asarray(ca, dtype)
+    ch_j = None if ch is None else jnp.asarray(ch, dtype)
+
+    if mode == "replicated":
+
+        def sweep(h, src, dst, w, mask):
+            wm = w[0] * mask[0]
+            a_p = _seg_sum(_mul(jnp.take(_mul(h, ch_j), src[0], axis=0),
+                                None) * (wm[:, None] if h.ndim == 2 else wm),
+                           dst[0], n)
+            a = jax.lax.psum(a_p, ax)
+            h_p = _seg_sum(jnp.take(_mul(a, ca_j), dst[0], axis=0)
+                           * (wm[:, None] if h.ndim == 2 else wm),
+                           src[0], n)
+            h_new = jax.lax.psum(h_p, ax)
+            h_new = h_new / (jnp.sum(jnp.abs(h_new), axis=0,
+                                     keepdims=h.ndim > 1) + 1e-30)
+            return h_new, a
+
+        smapped = jax.shard_map(
+            sweep, mesh=mesh,
+            in_specs=(P(), espec, espec, espec, espec),
+            out_specs=(P(), P()),
+        )
+        args = tuple(jnp.asarray(shards[k]) for k in ("src", "dst", "w", "mask"))
+        h0 = jnp.full((n,), 1.0 / n, dtype)
+        return smapped, h0, args
+
+    if mode == "dual_blocked_compact":
+        nb_a = int(shards["n_block"])
+        nb_h = int(shards["nb_h"])
+        n_hub = int(shards["n_hub"])
+        a_p, h_p = shards["a"], shards["h"]
+        ch_c = None if ch is None else jnp.asarray(
+            np.asarray(ch)[shards["nd_ids"]], dtype)
+
+        def sweep(h_blk, asrc, adst, aw, am, hsrc, hdst, hw, hm):
+            h_full = jax.lax.all_gather(h_blk[0], ax, tiled=True)  # (nb_h*S,)
+            blk_id = _flat_axis_index(axes)
+            hw_g = jnp.take(_mul(h_full[:n_hub], ch_c), asrc[0], axis=0) \
+                * (aw[0] * am[0])
+            a_blk = _seg_sum(hw_g, adst[0] - blk_id * nb_a, nb_a)
+            a_full = jax.lax.all_gather(a_blk, ax, tiled=True)     # (nb_a*S,)
+            aw_g = jnp.take(_mul(a_full[:n], ca_j), hsrc[0], axis=0) \
+                * (hw[0] * hm[0])
+            h_new_blk = _seg_sum(aw_g, hdst[0] - blk_id * nb_h, nb_h)
+            tot = jax.lax.psum(jnp.sum(jnp.abs(h_new_blk)), ax)
+            h_new_blk = h_new_blk / (tot + 1e-30)
+            return h_new_blk[None], a_blk[None]
+
+        smapped = jax.shard_map(
+            sweep, mesh=mesh,
+            in_specs=(espec,) + (espec,) * 8,
+            out_specs=(espec, espec),
+        )
+        args = tuple(jnp.asarray(a_p[k]) for k in ("src", "dst", "w", "mask")) + \
+               tuple(jnp.asarray(h_p[k]) for k in ("src", "dst", "w", "mask"))
+        h0 = jnp.full((n_shards, nb_h), 1.0 / n, dtype)
+        return smapped, h0, args
+
+    if mode == "dual_blocked":
+        nb = int(shards["n_block"])
+        a_p, h_p = shards["a"], shards["h"]
+        n_pad = nb * n_shards
+
+        def sweep(h_blk, asrc, adst, aw, am, hsrc, hdst, hw, hm):
+            # h_blk local view: (1, nb). Rebuild the full (padded) vector.
+            h_full = jax.lax.all_gather(h_blk[0], ax, tiled=True)  # (n_pad,)
+            blk_id = _flat_axis_index(axes)
+            # authority step: scatter into my dst block only
+            hw_g = jnp.take(_mul(h_full[:n], ch_j), asrc[0], axis=0) * (aw[0] * am[0])
+            a_blk = _seg_sum(hw_g, adst[0] - blk_id * nb, nb)
+            a_full = jax.lax.all_gather(a_blk, ax, tiled=True)     # (n_pad,)
+            # hub step: h-partition came from g.reverse(): hsrc = orig dst,
+            # hdst = orig src (block-local for me).
+            aw_g = jnp.take(_mul(a_full[:n], ca_j), hsrc[0], axis=0) * (hw[0] * hm[0])
+            h_new_blk = _seg_sum(aw_g, hdst[0] - blk_id * nb, nb)
+            tot = jax.lax.psum(jnp.sum(jnp.abs(h_new_blk)), ax)
+            h_new_blk = h_new_blk / (tot + 1e-30)
+            return h_new_blk[None], a_blk[None]
+
+        smapped = jax.shard_map(
+            sweep, mesh=mesh,
+            in_specs=(espec,) + (espec,) * 8,
+            out_specs=(espec, espec),
+        )
+        args = tuple(jnp.asarray(a_p[k]) for k in ("src", "dst", "w", "mask")) + \
+               tuple(jnp.asarray(h_p[k]) for k in ("src", "dst", "w", "mask"))
+        h0 = jnp.full((n_shards, nb), 1.0 / n, dtype)
+        del n_pad
+        return smapped, h0, args
+
+    raise ValueError(f"unsupported mode {mode}")
+
+
+def make_dryrun_rank_sweep(mesh, n: int, axes, mode: str = "baseline",
+                           n_hub: int | None = None):
+    """Sweep for the dry-run (and launch.rank): edge shards arrive as ARGS
+    (ShapeDtypeStructs at lower time), ca/ch folded into per-edge weights
+    host-side (w_e = ch[src_e] for the authority pass; the hub pass reuses
+    the same arrays with ca gathered at dst — see launch.rank).
+
+    Modes: baseline (replicated vector, 2 psums/sweep) | dual_blocked
+    (block-owned scatters, 2 all-gathers/sweep) | +bf16 (vector/weight
+    storage bf16, fp32 accumulation for norms/residuals).
+    """
+    ax = tuple(axes) if len(axes) > 1 else axes[0]
+    espec = P(ax, None)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    if "dual_blocked" in mode:
+        # "compact": hub vectors live in the reordered non-dangling space
+        # (paper's reordering insight applied to the distributed layout —
+        # dangling pages have zero hub score, so never ship them)
+        n_h = n_hub if ("compact" in mode and n_hub) else n
+        nb_a = -(-n // n_shards)
+        nb_h = -(-n_h // n_shards)
+
+        def sweep(h_blk, asrc, adst, aw, am, hsrc, hdst, hw, hm):
+            dt = h_blk.dtype
+            # gather in storage dtype; the barrier pins the convert AFTER
+            # the collective (XLA otherwise hoists bf16->f32 onto the wire)
+            h_full = jax.lax.all_gather(h_blk[0], ax, tiled=True)  # (n_h,)
+            h_full = jax.lax.optimization_barrier(h_full).astype(jnp.float32)
+            blk_id = _flat_axis_index(axes)
+            wmask = (aw[0] * am[0]).astype(jnp.float32)
+            hw_g = jnp.take(h_full, asrc[0], axis=0) * wmask  # compact src
+            a_blk = _seg_sum(hw_g, adst[0] - blk_id * nb_a, nb_a).astype(dt)
+            a_full = jax.lax.all_gather(a_blk, ax, tiled=True)     # (n,)
+            a_full = jax.lax.optimization_barrier(a_full).astype(jnp.float32)
+            wmask_h = (hw[0] * hm[0]).astype(jnp.float32)
+            aw_g = jnp.take(a_full, hsrc[0], axis=0) * wmask_h
+            h_new_blk = _seg_sum(aw_g, hdst[0] - blk_id * nb_h, nb_h)
+            tot = jax.lax.psum(jnp.sum(jnp.abs(h_new_blk)), ax)
+            h_new_blk = (h_new_blk / (tot + 1e-30)).astype(dt)
+            return h_new_blk[None], a_blk[None]
+
+        return jax.shard_map(sweep, mesh=mesh,
+                             in_specs=(espec,) + (espec,) * 8,
+                             out_specs=(espec, espec))
+
+    def sweep(h, src, dst, w, mask):
+        dt = h.dtype
+        wm = w[0] * mask[0]
+        a_p = _seg_sum(jnp.take(h, src[0], axis=0)
+                       * (wm[:, None] if h.ndim == 2 else wm), dst[0], n)
+        a = jax.lax.psum(a_p, ax)
+        h_p = _seg_sum(jnp.take(a, dst[0], axis=0)
+                       * (wm[:, None] if h.ndim == 2 else wm), src[0], n)
+        h_new = jax.lax.psum(h_p, ax)
+        tot = jnp.sum(jnp.abs(h_new.astype(jnp.float32)), axis=0,
+                      keepdims=h.ndim > 1)
+        h_new = (h_new.astype(jnp.float32) / (tot + 1e-30)).astype(dt)
+        return h_new, a
+
+    return jax.shard_map(sweep, mesh=mesh,
+                         in_specs=(P(), espec, espec, espec, espec),
+                         out_specs=(P(), P()))
+
+
+def blocked_to_full(h_blk: np.ndarray, n: int) -> np.ndarray:
+    """(S, nb) blocked hub vector -> (N,) full vector."""
+    return np.asarray(h_blk).reshape(-1)[:n]
+
+
+def ring_allreduce_chunked(x, axis: str, n_chunks: int = 4):
+    """Ring all-reduce via collective_permute, chunked so chunk k's sends
+    overlap chunk k+1's adds under XLA's async collective scheduler.
+    Semantics == lax.psum(x, axis). Used by the overlap §Perf experiment.
+    """
+    s = jax.lax.axis_size(axis)
+    if s == 1:
+        return x
+    pad = (-x.shape[0]) % (n_chunks * s)
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    per = xp.shape[0] // n_chunks
+    perm = [(i, (i + 1) % s) for i in range(s)]
+    me = jax.lax.axis_index(axis)
+
+    def reduce_scatter(buf):  # buf: (s, m) local contributions
+        def step(t, b):
+            send_idx = (me - t) % s
+            recv_idx = (me - t - 1) % s
+            chunk = jnp.take(b, send_idx, axis=0)
+            received = jax.lax.ppermute(chunk, axis, perm)
+            return b.at[recv_idx].add(received)
+
+        buf = jax.lax.fori_loop(0, s - 1, step, buf)
+        return jnp.take(buf, (me + 1) % s, axis=0)  # my reduced shard
+
+    outs = []
+    for k in range(n_chunks):
+        c = jax.lax.dynamic_slice_in_dim(xp, k * per, per, axis=0)
+        shard = reduce_scatter(c.reshape(s, -1, *c.shape[1:]))
+        gathered = jax.lax.all_gather(shard, axis, tiled=False)  # (s, m…)
+        # device d holds shard (d+1)%s: roll so entry j == shard j
+        full = jnp.roll(gathered, 1, axis=0).reshape(c.shape)
+        outs.append(full)
+    return jnp.concatenate(outs, axis=0)[: x.shape[0]]

@@ -1,0 +1,8 @@
+from .optimizer import (AdamWConfig, adamw_update, clip_by_global_norm,
+                        global_norm, init_opt_state, lr_schedule,
+                        opt_state_specs)
+from .train_step import make_train_step
+from .compression import (compress_grads, decompress_grads,
+                          ef_compressed_psum, init_error_state)
+from .data import (DataConfig, bst_batch, lm_batch, recsys_batch,
+                   shard_of_batch, twotower_batch)

@@ -1,0 +1,42 @@
+"""Generic train-step builder: value_and_grad -> clip -> AdamW, with
+optional microbatch gradient accumulation (scan) for memory-bound configs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1):
+    """loss_fn(params, batch) -> scalar. Returns step(params, opt_state,
+    batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), g0), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,6 @@
+import jax
+
+# fp64 for the ranking oracles (models pass explicit fp32/bf16 dtypes, so
+# they are unaffected). Do NOT set XLA_FLAGS here — smoke tests and benches
+# must see the real single-device CPU; dry-run spawns its own process.
+jax.config.update("jax_enable_x64", True)

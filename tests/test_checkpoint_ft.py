@@ -1,0 +1,88 @@
+"""Checkpoint/restore, preemption resume, straggler tolerance, elasticity."""
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ck
+from repro.core import accel_hits
+from repro.core.engine import RankingEngine
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.models import TransformerConfig, init_params, loss_fn
+from repro.train import AdamWConfig, DataConfig, init_opt_state, lm_batch, make_train_step
+
+CFG = TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=2,
+                        n_kv_heads=1, d_head=16, d_ff=64, vocab=64,
+                        remat=False)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = init_params(CFG, jax.random.key(0))
+    opt = init_opt_state(params)
+    ck.save(str(tmp_path), 7, {"params": params, "opt": opt},
+            extra={"note": "x"})
+    tree, step, extra = ck.restore(str(tmp_path),
+                                   {"params": params, "opt": opt})
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree["params"]), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_prune_and_latest(tmp_path):
+    params = {"w": jnp.ones((3,))}
+    for s in (1, 2, 3, 4):
+        ck.save(str(tmp_path), s, params)
+    assert ck.latest_step(str(tmp_path)) == 4
+    ck.prune(str(tmp_path), keep=2)
+    assert ck.latest_step(str(tmp_path)) == 4
+    assert len([d for d in os.listdir(tmp_path) if d.startswith("step_")]) == 2
+
+
+def test_preemption_resume_bit_identical(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    oc = AdamWConfig(lr=1e-3)
+    dc = DataConfig(kind="lm", global_batch=4, seq_len=8, vocab=64, seed=5)
+    step = jax.jit(make_train_step(partial(loss_fn, cfg=CFG), oc))
+
+    p = init_params(CFG, jax.random.key(0))
+    s = init_opt_state(p)
+    for i in range(6):
+        p, s, _ = step(p, s, lm_batch(dc, i))
+
+    p2 = init_params(CFG, jax.random.key(0))
+    s2 = init_opt_state(p2)
+    for i in range(3):
+        p2, s2, _ = step(p2, s2, lm_batch(dc, i))
+    ck.save(str(tmp_path), 3, {"params": p2, "opt": s2})
+    restored, start, _ = ck.restore(str(tmp_path), {"params": p2, "opt": s2})
+    p3, s3 = restored["params"], restored["opt"]
+    for i in range(start, 6):
+        p3, s3, _ = step(p3, s3, lm_batch(dc, i))
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_engine_straggler_tolerance():
+    g = generate_webgraph(WebGraphSpec(300, 2200, 0.6, seed=13))
+    ref = accel_hits(g, tol=1e-11)
+    eng = RankingEngine(g, "accel", n_shards=4, stale_limit=2,
+                        straggler_prob=0.25, seed=17)
+    r = eng.run(tol=1e-11, max_iter=3000)
+    assert r.converged and r.stale_events > 0
+    assert np.abs(r.hub - ref.v).max() < 1e-9
+
+
+def test_engine_elastic_reshard(tmp_path):
+    g = generate_webgraph(WebGraphSpec(250, 1800, 0.5, seed=19))
+    ref = accel_hits(g, tol=1e-11)
+    eng = RankingEngine(g, "accel", n_shards=4, checkpoint_dir=str(tmp_path),
+                        checkpoint_every=2)
+    eng.run(tol=1e-11, max_iter=4)  # preempted early
+    eng2 = RankingEngine(g, "accel", n_shards=16,
+                         checkpoint_dir=str(tmp_path))  # new world size
+    r = eng2.run(tol=1e-11, resume=True)
+    assert r.converged
+    assert np.abs(r.hub - ref.v).max() < 1e-9

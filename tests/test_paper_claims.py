@@ -1,0 +1,102 @@
+"""The paper's experimental claims, reproduced on scaled synthetic datasets
+matched to Table 7 (§4.2-4.4): convergence ordering and similarity."""
+import numpy as np
+import pytest
+
+from repro.core import accel_hits, back_button, cosine, pagerank, qi_hits, spearman
+from repro.graph import PAPER_TABLE7, paper_dataset
+
+SCALE = 0.06  # keep CI fast; benchmarks run scale=1.0
+TOL = 1e-9
+DATASETS = ["wikipedia", "jobs", "opera"]
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name in DATASETS:
+        g = paper_dataset(name, scale=SCALE)
+        bb = back_button(g)
+        out[name] = {
+            "orig": {
+                "hits": qi_hits(g, tol=TOL),
+                "accel": accel_hits(g, tol=TOL),
+                "pr": pagerank(g, tol=TOL),
+            },
+            "bb": {
+                "hits": qi_hits(bb, tol=TOL),
+                "accel": accel_hits(bb, tol=TOL),
+                "pr": pagerank(bb, tol=TOL),
+            },
+        }
+    return out
+
+
+def test_accel_faster_than_hits_original(results):
+    """§4.2: on original datasets the proposed algorithm converges faster
+    than HITS (paper notes yahoo, the most dangling-heavy set, can break
+    this — we allow one exception across datasets)."""
+    wins = sum(results[n]["orig"]["accel"].iters <= results[n]["orig"]["hits"].iters
+               for n in DATASETS)
+    assert wins >= len(DATASETS) - 1
+
+
+def test_accel_fastest_on_back_button(results):
+    """§4.2: in the back-button model the proposed algorithm beats BOTH
+    HITS and PageRank on all datasets."""
+    for n in DATASETS:
+        r = results[n]["bb"]
+        assert r["accel"].iters <= r["hits"].iters, n
+        assert r["accel"].iters <= r["pr"].iters, n
+
+
+def test_accel_margin_grows_on_back_button(results):
+    """§4.2: the proposed algorithm's advantage over PageRank widens under
+    the back-button model (the paper's headline Fig. 3 effect).
+
+    NOTE (documented deviation, see EXPERIMENTS.md): on our synthetic
+    power-law graphs plain HITS does not consistently beat PageRank under
+    back-button (paper refs [1,16,17,20,21] observed it on real crawls);
+    the reproduced and robust effect is accel << {HITS, PageRank}.
+    """
+    for n in DATASETS:
+        o, b = results[n]["orig"], results[n]["bb"]
+        margin_orig = o["pr"].iters / max(o["accel"].iters, 1)
+        margin_bb = b["pr"].iters / max(b["accel"].iters, 1)
+        assert margin_bb > margin_orig, n
+        assert b["accel"].iters < 0.5 * b["pr"].iters, n
+
+
+def test_similarity_to_qi_hits(results):
+    """§4.4 Table 8: accelerated vectors approximate QI-HITS well
+    (authority cosine ~0.86-0.91 avg; hub cosine higher)."""
+    cos_a = [cosine(results[n]["orig"]["accel"].aux,
+                    results[n]["orig"]["hits"].aux) for n in DATASETS]
+    cos_h = [cosine(results[n]["orig"]["accel"].v,
+                    results[n]["orig"]["hits"].v) for n in DATASETS]
+    assert np.mean(cos_a) > 0.6
+    assert np.mean(cos_h) > 0.8
+
+
+def test_degree_correlation_table1(results):
+    """§3.1 Table 1: authority correlates with indegree, hub with outdegree."""
+    for n in DATASETS:
+        g = paper_dataset(n, scale=SCALE)
+        r = results[n]["orig"]["hits"]
+        assert cosine(r.aux, g.indeg().astype(float)) > 0.5
+        assert spearman(r.v, g.outdeg().astype(float)) > 0.5
+
+
+def test_warm_start_qi_hits_from_accel(results):
+    """§5: accelerated vectors as QI-HITS warm start need only a few extra
+    iterations to reach the exact QI-HITS fixed point."""
+    import jax.numpy as jnp
+    from repro.core.hits import EdgeList, hits_sweep
+    from repro.core.power import power_method
+
+    n = DATASETS[0]
+    g = paper_dataset(n, scale=SCALE)
+    cold = results[n]["orig"]["hits"]
+    warm0 = jnp.asarray(results[n]["orig"]["accel"].v)
+    warm = power_method(hits_sweep(EdgeList.from_graph(g)), warm0, tol=TOL)
+    assert warm.iters < cold.iters

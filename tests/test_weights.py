@@ -1,0 +1,65 @@
+"""Paper eq. 2-3 weight properties (unit + hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.weights import accel_weights
+
+
+def test_balanced_node():
+    ca, ch = accel_weights(np.array([3]), np.array([3]))
+    # indeg == outdeg -> p=0 -> ca = ch = 1/2
+    assert np.isclose(ca[0], 0.5) and np.isclose(ch[0], 0.5)
+
+
+def test_isolated_node_zero():
+    ca, ch = accel_weights(np.array([0]), np.array([0]))
+    assert ca[0] == 0.0 and ch[0] == 0.0
+
+
+def test_pure_authority():
+    # indeg=5, outdeg=0: ca = (5/5)*5^1 = 5; ch = 0
+    ca, ch = accel_weights(np.array([5]), np.array([0]))
+    assert np.isclose(ca[0], 5.0) and ch[0] == 0.0
+
+
+def test_pure_hub():
+    ca, ch = accel_weights(np.array([0]), np.array([4]))
+    assert ca[0] == 0.0 and np.isclose(ch[0], 4.0)
+
+
+def test_paper_formula_example():
+    # indeg=6, outdeg=2: p=+1, ca=(6/8)*4=3, ch=(2/8)/4=1/16
+    ca, ch = accel_weights(np.array([6]), np.array([2]))
+    assert np.isclose(ca[0], 3.0)
+    assert np.isclose(ch[0], 1.0 / 16.0)
+
+
+@given(st.integers(0, 10**6), st.integers(0, 10**6))
+@settings(max_examples=200, deadline=None)
+def test_weight_ordering(indeg, outdeg):
+    """ca > ch iff indeg > outdeg (the paper's defining observation)."""
+    ca, ch = accel_weights(np.array([indeg]), np.array([outdeg]))
+    if indeg + outdeg == 0:
+        assert ca[0] == ch[0] == 0.0
+    elif indeg > outdeg:
+        assert ca[0] > ch[0]
+    elif indeg < outdeg:
+        assert ca[0] < ch[0]
+    else:
+        assert np.isclose(ca[0], ch[0])
+    assert np.isfinite(ca[0]) and np.isfinite(ch[0])
+    assert ca[0] >= 0 and ch[0] >= 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 1000), st.integers(0, 1000)),
+                min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_weight_product_invariant(pairs):
+    """ca_i * ch_i == indeg*outdeg/deg^2 (the |diff|^p factors cancel)."""
+    indeg = np.array([p[0] for p in pairs], float)
+    outdeg = np.array([p[1] for p in pairs], float)
+    ca, ch = accel_weights(indeg, outdeg)
+    deg = indeg + outdeg
+    ok = deg > 0
+    expected = np.where(ok, indeg * outdeg / np.maximum(deg, 1) ** 2, 0.0)
+    assert np.allclose(ca * ch, expected)
