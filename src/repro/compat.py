@@ -1,0 +1,85 @@
+"""Version-tolerant JAX API shims.
+
+The codebase targets the post-0.5 mesh API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``) but must also run on 0.4.x, where those
+live under different names (or do not exist). Everything that touches the
+mesh/shard_map surface goes through this module so the version split lives
+in exactly one place.
+
+Exports:
+
+* ``shard_map``         — ``jax.shard_map`` or the 0.4.x experimental one.
+* ``set_mesh``          — context manager activating a mesh for jit'd
+                          shard_map/sharding-constraint code.
+* ``make_mesh``         — ``jax.make_mesh`` with Auto axis types when the
+                          installed JAX supports them, silently without
+                          otherwise (0.4.x meshes are implicitly auto).
+* ``get_abstract_mesh`` — the ambient mesh, or None when none is active
+                          (0.4.x: the thread-local physical mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "make_mesh", "get_abstract_mesh",
+           "axis_size", "cost_analysis"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):
+    set_mesh = jax.sharding.use_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # 0.4.x: Mesh is itself a context manager that installs the
+        # thread-local physical mesh (the classic pjit pattern).
+        with mesh:
+            yield mesh
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def axis_size(name) -> int:
+    """Size of a named mapped axis (``jax.lax.axis_size`` post-0.5)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    frame = jax.core.axis_frame(name)  # 0.4.x: int, or a frame with .size
+    return frame if isinstance(frame, int) else frame.size
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict (0.4.x returns a list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
+def get_abstract_mesh():
+    """Ambient mesh (abstract on 0.5+, physical on 0.4.x) or None."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    return None if m is None or m.empty else m

@@ -7,7 +7,8 @@ dangling-reordered variants (beyond-paper).
 """
 from .backbutton import back_button
 from .extrapolation import aitken, quadratic
-from .hits import EdgeList, accel_hits, authority_sweep, hits_sweep, qi_hits, uniform_start
+from .hits import (EdgeList, accel_hits, authority_sweep, hits_sweep,
+                   hits_sweep_cols, qi_hits, uniform_start)
 from .metrics import cosine, l1_residual, spearman, topk, topk_overlap
 from .pagerank import pagerank
 from .power import PowerResult, power_method, power_method_jit
@@ -16,7 +17,8 @@ from .weights import accel_weights
 
 __all__ = [
     "back_button", "aitken", "quadratic", "EdgeList", "accel_hits",
-    "authority_sweep", "hits_sweep", "qi_hits", "uniform_start", "cosine",
+    "authority_sweep", "hits_sweep", "hits_sweep_cols", "qi_hits",
+    "uniform_start", "cosine",
     "l1_residual", "spearman", "topk", "topk_overlap", "pagerank",
     "PowerResult", "power_method", "power_method_jit",
     "compact_nondangling", "hits_reordered", "accel_weights",

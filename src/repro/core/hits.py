@@ -97,6 +97,27 @@ def accel_hits(g: Graph, tol=1e-10, max_iter=2000, v=1, dtype=jnp.float64,
     return _finalize(edges, res, ca=ca, ch=ch, zeta=zeta)
 
 
+def hits_sweep_cols(edges: EdgeList, ca, ch, mask):
+    """Multi-query sweep: ca/ch/mask are (N, V); column j is accelerated
+    HITS restricted to its own focused node set.
+
+    ``mask[:, j]`` is the {0,1} membership of column j's base set S_j; the
+    per-column weights must be computed from the degrees *induced by S_j*
+    (so they are already zero off-support). Masking each half-step's output
+    then removes scatter into off-support nodes, making the column operator
+    exactly P_j·L·P_j — the induced subgraph of S_j. One edge traversal
+    therefore serves V independent query-focused rankings (the (N, V)
+    multi-vector path of DESIGN.md §3, driven per-query).
+    """
+
+    def sweep(h):
+        a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
+        h_new = spmv_src(a * ca, edges.src, edges.dst, edges.n, edges.w) * mask
+        return normalize_l1(h_new, axis=0), a
+
+    return sweep
+
+
 def authority_sweep(edges: EdgeList, ca=None, ch=None, zeta: float = 1.0):
     """One-matrix form (eq. 6): a -> a·X, X = Ca·Lᵀ·Ch·L (ca/ch None = LᵀL).
 

@@ -11,6 +11,7 @@ hub mass).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -97,7 +98,9 @@ def paper_dataset(name: str, scale: float = 1.0, seed: int = 0) -> Graph:
         n_nodes=max(int(pages * scale), 64),
         n_edges=max(int(links * scale), 256),
         dangling_frac=pct_dp / 100.0,
-        seed=seed + (hash(name) % 65536),
+        # crc32, NOT hash(): str hash is salted per process (PYTHONHASHSEED),
+        # which made every dataset — and the tests on it — nondeterministic.
+        seed=seed + (zlib.crc32(name.encode()) % 65536),
     )
     return generate_webgraph(spec)
 

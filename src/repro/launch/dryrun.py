@@ -19,6 +19,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from ..compat import set_mesh  # noqa: E402
 from ..configs import REGISTRY, get_spec  # noqa: E402
 from ..models.sharding import tree_filter_specs, filter_spec  # noqa: E402
 from ..sparse.dist import make_dryrun_rank_sweep  # noqa: E402
@@ -100,7 +101,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
             step = build_step(spec, shape_name, mode=mode)
             fn = step.fn
         in_sh = _to_named(step.in_specs, mesh, step.args)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh)
             lowered = jitted.lower(*step.args)
             compiled = lowered.compile()

@@ -197,8 +197,9 @@ def analyze(compiled, model_flops: float, n_devices: int) -> dict:
     undercounted x n_layers. The raw cost_analysis numbers are recorded for
     reference.
     """
+    from ..compat import cost_analysis
     from .hlo_cost import HloModule
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     mod = HloModule(compiled.as_text())
     flops = float(max(mod.flops(), float(cost.get("flops", 0.0))))
     byts = float(max(mod.bytes_accessed(),

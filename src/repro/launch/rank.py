@@ -15,7 +15,11 @@ import argparse
 import json
 import time
 
-import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)  # engine vectors are fp64
+
+import numpy as np  # noqa: E402
 
 
 def main():

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_abstract_mesh
+
 DP = ("pod", "data")  # canonical data-parallel axes (outermost first)
 
 
@@ -24,7 +26,7 @@ def _filter_axis(a, names):
 
 def shard_hint(x, *spec):
     """with_sharding_constraint if a mesh is active; identity otherwise."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)

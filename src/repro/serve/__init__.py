@@ -1,2 +1,9 @@
 from .kvquant import (dequantize_kv, init_quant_cache, quant_decode_attention,
                       quantize_kv, update_quant_cache)
+from .rank_service import (QueryResult, RankService, RankServiceConfig)
+
+__all__ = [
+    "dequantize_kv", "init_quant_cache", "quant_decode_attention",
+    "quantize_kv", "update_quant_cache",
+    "QueryResult", "RankService", "RankServiceConfig",
+]

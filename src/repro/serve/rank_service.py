@@ -1,0 +1,304 @@
+"""Query-focused HITS ranking service (the ROADMAP serving scenario).
+
+Serves per-query accelerated-HITS rankings over focused subgraphs:
+
+1. **Focus** — each query's root set expands to a base set and induced
+   subgraph (``graph.subgraph``), shrinking the iteration space from the
+   crawl to a few hundred pages (Dong et al.'s lumping motivation, done
+   structurally).
+2. **Batch** — up to V concurrent queries run as the V columns of ONE
+   multi-vector accelerated-HITS iteration over the union subgraph
+   (``core.hits.hits_sweep_cols``): per-column induced weights + masks make
+   column j mathematically identical to running ``accel_hits`` on query
+   j's own subgraph, while the edge traversal (the hot loop) is shared.
+3. **Cache** — converged authority/hub vectors are LRU-cached per root-set
+   hash; repeat queries are served from cache, and overlapping queries
+   warm-start from the last converged scores instead of the uniform
+   vector (paper §5: accelerated vectors as warm starts; Peserico &
+   Pretto: query-time HITS can converge slowly, so the saved sweeps are
+   the point).
+
+Shapes are padded to power-of-two buckets so the jitted convergence loop
+compiles once per bucket, not once per query mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hits import EdgeList, hits_sweep_cols
+from ..core.weights import accel_weights
+from ..graph.structure import Graph
+from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor, root_set_key
+from ..sparse.spmv import normalize_l1, spmv_dst
+
+
+@dataclasses.dataclass
+class RankServiceConfig:
+    v_max: int = 8             # queries batched per traversal (the V columns)
+    out_cap: int = 32          # base-set expansion caps (per root)
+    in_cap: int = 32
+    tol: float = 1e-10
+    max_iter: int = 1000
+    cache_size: int = 512      # LRU entries (root-set hash -> scores)
+    warm_min_overlap: float = 0.5  # min score coverage to warm-start
+    dtype: object = jnp.float64
+
+
+@dataclasses.dataclass
+class QueryResult:
+    roots: np.ndarray       # the (deduped, sorted) root set
+    nodes: np.ndarray       # global ids of the focused subgraph
+    authority: np.ndarray   # L1-normalized over ``nodes``
+    hub: np.ndarray
+    iters: int              # sweeps to convergence (0 for a cache hit)
+    status: str             # "hit" | "warm" | "cold"
+    key: str                # root-set hash (the cache key)
+
+    def topk(self, k: int = 10):
+        """Top-k (global node id, authority score) pairs."""
+        order = np.argsort(-self.authority)[:k]
+        return [(int(self.nodes[i]), float(self.authority[i]))
+                for i in order]
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    nodes: np.ndarray
+    authority: np.ndarray
+    hub: np.ndarray
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 1).bit_length()
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter):
+    """On-device convergence loop for V masked columns.
+
+    Per-column L1 residuals; ``conv[j]`` records the sweep at which column
+    j first hit tol (-1 while running). All columns keep sweeping until the
+    last converges — converged columns sit at their fixed point.
+    Returns (h, a, conv).
+    """
+    edges = EdgeList(src, dst, h0.shape[0], w)
+    sweep = hits_sweep_cols(edges, ca, ch, mask)
+
+    def body(state):
+        h, _a, k, conv = state
+        h_new, a = sweep(h)
+        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
+        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+        return h_new, a, k + 1, conv
+
+    def cond(state):
+        _h, _a, k, conv = state
+        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+    init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
+            jnp.full((h0.shape[1],), -1, jnp.int32))
+    h, _a, k, conv = jax.lax.while_loop(cond, body, init)
+    conv = jnp.where(conv < 0, k, conv)  # hit max_iter
+    # finalize: recompute authority from converged h (same as hits._finalize)
+    a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
+    return h, normalize_l1(a, axis=0), conv
+
+
+class RankService:
+    """Batched, cached, warm-starting query-ranking front end over one graph."""
+
+    def __init__(self, g: Graph, config: Optional[RankServiceConfig] = None):
+        self.g = g
+        self.cfg = config or RankServiceConfig()
+        # without jax_enable_x64 a float64 request silently runs fp32, whose
+        # residual floor (~1e-7) never reaches the default tol — every cold
+        # query would spin to max_iter. Clamp tol to what the effective
+        # dtype can resolve and say so.
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # x64-truncation noise
+            eff = jnp.zeros((), self.cfg.dtype).dtype
+        self._dtype = eff
+        min_tol = 1e3 * float(jnp.finfo(eff).eps)
+        if self.cfg.tol < min_tol:
+            warnings.warn(
+                f"RankService tol={self.cfg.tol:g} is below the {eff} "
+                f"residual floor (x64 disabled?); clamping to {min_tol:g}",
+                stacklevel=2)
+            self.cfg = dataclasses.replace(self.cfg, tol=min_tol)
+        self.extractor = SubgraphExtractor(g, self.cfg.out_cap,
+                                           self.cfg.in_cap)
+        self._cache: OrderedDict[str, _CacheEntry] = OrderedDict()
+        # last converged scores per global node — the warm-start table
+        self._warm_h = np.zeros(g.n_nodes)
+        self._warm_seen = np.zeros(g.n_nodes, bool)
+        self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
+                      "cold": 0, "sweeps": 0}
+
+    # -- cache ------------------------------------------------------------
+
+    def _cache_get(self, key: str) -> Optional[_CacheEntry]:
+        e = self._cache.get(key)
+        if e is not None:
+            self._cache.move_to_end(key)
+        return e
+
+    def _cache_put(self, key: str, e: _CacheEntry):
+        self._cache[key] = e
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cfg.cache_size:
+            self._cache.popitem(last=False)
+
+    # -- serving ----------------------------------------------------------
+
+    def rank(self, queries: Sequence[Sequence[int]], *,
+             refresh: bool = False) -> List[QueryResult]:
+        """Rank a list of root sets. Chunks of ``v_max`` queries share one
+        traversal. ``refresh`` re-iterates exact cache hits (warm-started)
+        instead of serving the stored scores."""
+        # validate everything before serving anything: a mid-batch raise
+        # would lose computed results and corrupt the stats counters
+        clean = []
+        for roots in queries:
+            roots_u = np.unique(np.asarray(roots, np.int64)).astype(np.int32)
+            if len(roots_u) == 0:
+                raise ValueError("empty root set")
+            if roots_u[0] < 0 or roots_u[-1] >= self.g.n_nodes:
+                # negative ids would silently wrap through numpy indexing
+                raise ValueError(
+                    f"root ids must be in [0, {self.g.n_nodes}); got "
+                    f"[{roots_u[0]}, {roots_u[-1]}]")
+            clean.append(roots_u)
+        out: List[QueryResult] = []
+        v = self.cfg.v_max
+        for i in range(0, len(clean), v):
+            out.extend(self._rank_batch(clean[i:i + v], refresh))
+        return out
+
+    def _rank_batch(self, queries, refresh: bool) -> List[QueryResult]:
+        self.stats["batches"] += 1
+        self.stats["queries"] += len(queries)
+        results: List[Optional[QueryResult]] = [None] * len(queries)
+
+        # cache hits are served without touching the device; identical
+        # uncached root sets in one chunk share a single column
+        todo = []  # (slot, FocusedSubgraph, warm_entry|None)
+        dup_of = {}  # key -> slot of the column that computes it
+        dups = []  # (slot, owner_slot)
+        for slot, roots_u in enumerate(queries):
+            key = root_set_key(roots_u)
+            entry = self._cache_get(key)
+            if entry is not None and not refresh:
+                self.stats["hit"] += 1
+                results[slot] = QueryResult(
+                    roots=roots_u, nodes=entry.nodes,
+                    authority=entry.authority, hub=entry.hub,
+                    iters=0, status="hit", key=key)
+                continue
+            if key in dup_of:
+                dups.append((slot, dup_of[key]))
+                continue
+            dup_of[key] = slot
+            todo.append((slot, self.extractor.extract(roots_u), entry))
+        if not todo:
+            return results  # all hits
+
+        subs = [t[1] for t in todo]
+        union = self.extractor.extract_union(subs)
+        nodes_u = union.nodes
+        n_u, e_u = len(nodes_u), union.graph.n_edges
+        n_pad = _next_pow2(max(n_u + 1, 16))  # +1: a guaranteed-dead pad row
+        e_pad = _next_pow2(max(e_u, 16))
+        V = self.cfg.v_max
+
+        src = np.full(e_pad, n_pad - 1, np.int32)
+        dst = np.full(e_pad, n_pad - 1, np.int32)
+        w = np.zeros(e_pad)
+        src[:e_u] = union.graph.src
+        dst[:e_u] = union.graph.dst
+        w[:e_u] = 1.0
+
+        ca = np.zeros((n_pad, V))
+        ch = np.zeros((n_pad, V))
+        mask = np.zeros((n_pad, V))
+        h0 = np.zeros((n_pad, V))
+        statuses = [""] * len(todo)
+        for j, (_slot, fs, entry) in enumerate(todo):
+            loc = np.searchsorted(nodes_u, fs.nodes)      # S_j in union ids
+            m = np.zeros(n_u, bool)
+            m[loc] = True
+            # induced degrees of S_j (edges with both endpoints in S_j)
+            sel = m[union.graph.src] & m[union.graph.dst]
+            indeg = np.bincount(union.graph.dst[sel], minlength=n_u)
+            outdeg = np.bincount(union.graph.src[sel], minlength=n_u)
+            ca_j, ch_j = accel_weights(indeg, outdeg)
+            ca[:n_u, j] = ca_j * m
+            ch[:n_u, j] = ch_j * m
+            mask[:n_u, j] = m
+            h0[:n_u, j], statuses[j] = self._start_vector(fs, entry, m, loc)
+            self.stats[statuses[j]] += 1
+
+        h, a, conv = _converge_batch(
+            jnp.asarray(h0, self._dtype),
+            jnp.asarray(src), jnp.asarray(dst),
+            jnp.asarray(w, self._dtype),
+            jnp.asarray(ca, self._dtype),
+            jnp.asarray(ch, self._dtype),
+            jnp.asarray(mask, self._dtype),
+            self.cfg.tol, self.cfg.max_iter)
+        h = np.asarray(h)
+        a = np.asarray(a)
+        conv = np.asarray(conv)
+        self.stats["sweeps"] += int(conv.max(initial=0))
+
+        for j, (slot, fs, _entry) in enumerate(todo):
+            loc = np.searchsorted(nodes_u, fs.nodes)
+            auth_j, hub_j = a[loc, j], h[loc, j]
+            entry = _CacheEntry(nodes=fs.nodes, authority=auth_j, hub=hub_j)
+            self._cache_put(fs.key, entry)
+            self._warm_h[fs.nodes] = hub_j
+            self._warm_seen[fs.nodes] = True
+            results[slot] = QueryResult(
+                roots=fs.nodes[fs.roots_local], nodes=fs.nodes,
+                authority=auth_j, hub=hub_j, iters=int(conv[j]),
+                status=statuses[j], key=fs.key)
+        for slot, owner in dups:  # identical root sets share the column
+            results[slot] = results[owner]
+            self.stats[results[owner].status] += 1
+        return results
+
+    def _start_vector(self, fs: FocusedSubgraph, entry, m: np.ndarray,
+                      loc: np.ndarray):
+        """Column start vector (union-local) + its status label.
+
+        Exact-key refresh warm-starts from the cached hub vector; otherwise
+        the global warm table supplies scores for previously-seen nodes if
+        they cover enough of the base set. Fallback: the uniform vector
+        over S_j (what ``accel_hits`` cold-starts from).
+        """
+        n_u = len(m)
+        v = np.zeros(n_u)
+        if entry is not None and len(entry.nodes) == len(fs.nodes) \
+                and (entry.nodes == fs.nodes).all():
+            v[loc] = entry.hub
+            if v.sum() > 0:
+                return v / np.abs(v).sum(), "warm"
+        seen = self._warm_seen[fs.nodes]
+        if seen.mean() >= self.cfg.warm_min_overlap:
+            v[loc] = np.where(seen, self._warm_h[fs.nodes], 0.0)
+            tot = np.abs(v).sum()
+            if tot > 0:
+                # unseen nodes get the mean warm mass so no page starts dead
+                fill = tot / max(seen.sum(), 1)
+                v[loc] = np.where(seen, v[loc], fill)
+                return v / np.abs(v).sum(), "warm"
+        v[:] = 0.0
+        v[loc] = 1.0 / len(fs.nodes)
+        return v, "cold"

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import axis_size, shard_map
 from ..graph.partition import partition_edges, partition_edges_by_dst_block
 from ..graph.structure import Graph
 
@@ -76,7 +77,7 @@ def _flat_axis_index(axes):
     """Flattened shard index across possibly-multiple mesh axes."""
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -113,7 +114,7 @@ def make_dist_hits_sweep(mesh, shards, n: int, axes=("data",),
                                      keepdims=h.ndim > 1) + 1e-30)
             return h_new, a
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             sweep, mesh=mesh,
             in_specs=(P(), espec, espec, espec, espec),
             out_specs=(P(), P()),
@@ -144,7 +145,7 @@ def make_dist_hits_sweep(mesh, shards, n: int, axes=("data",),
             h_new_blk = h_new_blk / (tot + 1e-30)
             return h_new_blk[None], a_blk[None]
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             sweep, mesh=mesh,
             in_specs=(espec,) + (espec,) * 8,
             out_specs=(espec, espec),
@@ -175,7 +176,7 @@ def make_dist_hits_sweep(mesh, shards, n: int, axes=("data",),
             h_new_blk = h_new_blk / (tot + 1e-30)
             return h_new_blk[None], a_blk[None]
 
-        smapped = jax.shard_map(
+        smapped = shard_map(
             sweep, mesh=mesh,
             in_specs=(espec,) + (espec,) * 8,
             out_specs=(espec, espec),
@@ -231,7 +232,7 @@ def make_dryrun_rank_sweep(mesh, n: int, axes, mode: str = "baseline",
             h_new_blk = (h_new_blk / (tot + 1e-30)).astype(dt)
             return h_new_blk[None], a_blk[None]
 
-        return jax.shard_map(sweep, mesh=mesh,
+        return shard_map(sweep, mesh=mesh,
                              in_specs=(espec,) + (espec,) * 8,
                              out_specs=(espec, espec))
 
@@ -249,7 +250,7 @@ def make_dryrun_rank_sweep(mesh, n: int, axes, mode: str = "baseline",
         h_new = (h_new.astype(jnp.float32) / (tot + 1e-30)).astype(dt)
         return h_new, a
 
-    return jax.shard_map(sweep, mesh=mesh,
+    return shard_map(sweep, mesh=mesh,
                          in_specs=(P(), espec, espec, espec, espec),
                          out_specs=(P(), P()))
 
@@ -264,7 +265,7 @@ def ring_allreduce_chunked(x, axis: str, n_chunks: int = 4):
     overlap chunk k+1's adds under XLA's async collective scheduler.
     Semantics == lax.psum(x, axis). Used by the overlap §Perf experiment.
     """
-    s = jax.lax.axis_size(axis)
+    s = axis_size(axis)
     if s == 1:
         return x
     pad = (-x.shape[0]) % (n_chunks * s)

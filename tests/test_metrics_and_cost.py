@@ -42,7 +42,8 @@ def test_hlo_cost_matches_xla_loop_free():
     C = jax.ShapeDtypeStruct((512, 64), jnp.float32)
     comp = jax.jit(f).lower(A, B, C).compile()
     mod = HloModule(comp.as_text())
-    ca = comp.cost_analysis()
+    from repro.compat import cost_analysis
+    ca = cost_analysis(comp)
     assert abs(mod.flops() - ca["flops"]) / ca["flops"] < 0.05
     assert abs(mod.bytes_accessed() - ca["bytes accessed"]) / \
         ca["bytes accessed"] < 0.2
@@ -78,10 +79,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_cost import HloModule
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("d",))
 def f(x):
-    return jax.shard_map(lambda xs: jax.lax.psum(xs, "d"), mesh=mesh,
-                         in_specs=P("d", None), out_specs=P())(x)
+    return shard_map(lambda xs: jax.lax.psum(xs, "d"), mesh=mesh,
+                     in_specs=P("d", None), out_specs=P())(x)
 X = jax.ShapeDtypeStruct((8, 128), jnp.float32)
 comp = jax.jit(f).lower(X).compile()
 cb = HloModule(comp.as_text()).collective_bytes()

@@ -88,15 +88,29 @@ def test_degree_correlation_table1(results):
 
 
 def test_warm_start_qi_hits_from_accel(results):
-    """§5: accelerated vectors as QI-HITS warm start need only a few extra
-    iterations to reach the exact QI-HITS fixed point."""
+    """§5: accelerated vectors as QI-HITS warm start reach the exact QI-HITS
+    fixed point in no more sweeps than the uniform start — and strictly
+    fewer where convergence is slow (back-button model; Peserico & Pretto
+    show query-time HITS can need many iterations, which is exactly where
+    warm-starting pays).
+
+    (Was flaky: the datasets themselves were nondeterministic via salted
+    ``hash()`` seeding, and on the tiny fast-converging originals the old
+    strict inequality broke on ties.)
+    """
     import jax.numpy as jnp
     from repro.core.hits import EdgeList, hits_sweep
     from repro.core.power import power_method
 
-    n = DATASETS[0]
-    g = paper_dataset(n, scale=SCALE)
-    cold = results[n]["orig"]["hits"]
-    warm0 = jnp.asarray(results[n]["orig"]["accel"].v)
-    warm = power_method(hits_sweep(EdgeList.from_graph(g)), warm0, tol=TOL)
-    assert warm.iters < cold.iters
+    for n in DATASETS:
+        g = paper_dataset(n, scale=SCALE)
+        for tag, gg in (("orig", g), ("bb", back_button(g))):
+            cold = results[n][tag]["hits"]
+            warm0 = jnp.asarray(results[n][tag]["accel"].v)
+            warm = power_method(hits_sweep(EdgeList.from_graph(gg)), warm0,
+                                tol=TOL)
+            # same fixed point, never more sweeps than cold
+            assert np.abs(warm.v - cold.v).max() < 1e-7, (n, tag)
+            assert warm.iters <= cold.iters, (n, tag)
+            if tag == "bb":  # slow-convergence regime: strict win
+                assert warm.iters < cold.iters, n

@@ -1,0 +1,205 @@
+"""Query-focused ranking service: focused subgraphs, batched-V columns vs
+per-query oracles, cache hits, warm starts, and weight properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accel_hits
+from repro.core.weights import accel_weights
+from repro.graph import (Graph, SubgraphExtractor, WebGraphSpec,
+                         generate_webgraph, root_set_key)
+from repro.serve import RankService, RankServiceConfig
+
+TOL = 1e-10
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generate_webgraph(WebGraphSpec(3000, 24000, 0.5, seed=11))
+
+
+@pytest.fixture(scope="module")
+def queries(g):
+    rng = np.random.default_rng(3)
+    return [rng.choice(g.n_nodes, size=5, replace=False) for _ in range(9)]
+
+
+# ---------------------------------------------------------------- subgraph
+
+
+def test_focused_subgraph_structure(g):
+    ex = SubgraphExtractor(g, out_cap=16, in_cap=16)
+    roots = np.array([1, 5, 9])
+    fs = ex.extract(roots)
+    # roots present, nodes sorted-unique, edges are real graph edges
+    assert set(roots.tolist()) <= set(fs.nodes.tolist())
+    assert (np.diff(fs.nodes) > 0).all()
+    assert (fs.nodes[fs.roots_local] == roots).all()
+    real = set(zip(g.src.tolist(), g.dst.tolist()))
+    sub_edges = set(zip(fs.nodes[fs.graph.src].tolist(),
+                        fs.nodes[fs.graph.dst].tolist()))
+    assert sub_edges <= real
+    # induced: every graph edge between base nodes is present
+    base = set(fs.nodes.tolist())
+    want = {(s, d) for s, d in real if s in base and d in base}
+    assert sub_edges == want
+
+
+def test_root_set_key_stable_under_order_and_dups():
+    assert root_set_key([3, 1, 2]) == root_set_key([1, 2, 3, 3])
+    assert root_set_key([1, 2]) != root_set_key([1, 2, 3])
+
+
+def test_base_set_expansion_covers_neighbors(g):
+    ex = SubgraphExtractor(g, out_cap=64, in_cap=64)
+    root = int(np.argmax(g.outdeg()))  # a node with real out-links
+    base = set(ex.expand([root]).tolist())
+    out_nbrs = set(g.dst[g.src == root].tolist())
+    in_nbrs = set(g.src[g.dst == root].tolist())
+    assert len(out_nbrs | in_nbrs) > 0
+    assert root in base
+    # every neighbor class is represented up to its cap (truncation only)
+    assert len(base & out_nbrs) >= min(len(out_nbrs), 64)
+    assert len(base & in_nbrs) >= min(len(in_nbrs), 64)
+    assert base <= out_nbrs | in_nbrs | {root}
+
+
+# ----------------------------------------------------- batched vs oracle
+
+
+def test_batched_service_matches_per_query_oracle(g, queries):
+    """Each of the V batched columns equals accel_hits on that query's own
+    focused subgraph (authority AND hub, <=1e-8 L1) — one traversal, V
+    independent correct rankings."""
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    results = svc.rank(queries)
+    assert {r.status for r in results} == {"cold"}
+    for q, r in zip(queries, results):
+        fs = svc.extractor.extract(q)
+        assert (fs.nodes == r.nodes).all()
+        oracle = accel_hits(fs.graph, tol=TOL)
+        assert np.abs(np.asarray(oracle.aux) - r.authority).sum() <= 1e-8
+        assert np.abs(np.asarray(oracle.v) - r.hub).sum() <= 1e-8
+
+
+def test_batch_width_does_not_change_scores(g, queries):
+    """V=1 (pure sequential) and V=8 batching give identical rankings."""
+    s1 = RankService(g, RankServiceConfig(v_max=1, tol=TOL))
+    s8 = RankService(g, RankServiceConfig(v_max=8, tol=TOL))
+    r1 = s1.rank(queries)
+    r8 = s8.rank(queries)
+    for a, b in zip(r1, r8):
+        assert np.abs(a.authority - b.authority).sum() < 1e-9
+
+
+# ------------------------------------------------------------------ cache
+
+
+def test_cache_hit_returns_identical_scores(g, queries):
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    cold = svc.rank(queries)
+    again = svc.rank(queries)
+    for c, a in zip(cold, again):
+        assert a.status == "hit" and a.iters == 0
+        assert np.array_equal(a.authority, c.authority)
+        assert np.array_equal(a.hub, c.hub)
+    assert svc.stats["hit"] == len(queries)
+    # order/duplicates in the root set still hit
+    r = svc.rank([list(reversed(list(queries[0]))) + [int(queries[0][0])]])
+    assert r[0].status == "hit"
+
+
+def test_cache_lru_eviction(g, queries):
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL, cache_size=2))
+    svc.rank(queries[:3])
+    assert len(svc._cache) == 2  # oldest evicted
+    assert svc.rank([queries[0]])[0].status != "hit"
+    assert svc.rank([queries[2]])[0].status == "hit"
+
+
+# ------------------------------------------------------------- warm start
+
+
+def test_warm_start_converges_no_slower_than_cold(g, queries):
+    """Refreshing a cached query warm-starts from its converged vectors and
+    needs no more sweeps than the cold run (paper §5 applied to serving)."""
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    cold = svc.rank(queries)
+    warm = svc.rank(queries, refresh=True)
+    for c, w in zip(cold, warm):
+        assert w.status == "warm"
+        assert w.iters <= c.iters
+        assert np.abs(w.authority - c.authority).sum() < 1e-8
+    # warm starts strictly win in aggregate (not merely tie)
+    assert sum(w.iters for w in warm) < sum(c.iters for c in cold)
+
+
+def test_overlapping_query_warm_starts(g):
+    """A new query whose base set mostly overlaps served nodes warm-starts
+    from the global score table."""
+    rng = np.random.default_rng(5)
+    roots = rng.choice(g.n_nodes, size=6, replace=False)
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    svc.rank([roots])
+    shifted = roots[:-1]  # drop one root: overlapping but different key
+    r = svc.rank([shifted])[0]
+    assert r.key != root_set_key(roots)
+    assert r.status == "warm"
+    # and the scores still match that query's own oracle
+    fs = svc.extractor.extract(shifted)
+    oracle = accel_hits(fs.graph, tol=TOL)
+    assert np.abs(np.asarray(oracle.aux) - r.authority).sum() <= 1e-8
+
+
+# ------------------------------------------------- degenerate root sets
+
+
+def test_invalid_root_sets_rejected(g):
+    """Empty / out-of-range root sets raise instead of wrapping silently
+    (negative ids would otherwise index from the end of the node tables) —
+    and they raise up front, before any query is served or counted."""
+    svc = RankService(g, RankServiceConfig(v_max=2, tol=TOL))
+    for bad in ([], [-1], [g.n_nodes]):
+        with pytest.raises(ValueError):
+            svc.rank([[1, 2, 3], bad])  # valid query first
+    assert svc.stats["queries"] == 0  # nothing partially served
+
+
+def test_duplicate_queries_share_a_column(g):
+    """Identical uncached root sets in one chunk compute once and fan out."""
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    r = svc.rank([[7, 8, 9], [9, 8, 7], [7, 8, 9, 9]])  # same set, 3 ways
+    assert r[0] is r[1] is r[2]
+    assert svc.stats["cold"] == 3  # still counted per query
+    assert len(svc._cache) == 1
+
+
+def test_isolated_roots_rank_to_zero(g):
+    """Roots with no links at all yield an empty focused ranking, not NaNs."""
+    iso = np.nonzero((g.indeg() == 0) & (g.outdeg() == 0))[0]
+    if len(iso) == 0:
+        pytest.skip("generator produced no fully-isolated nodes")
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    r = svc.rank([iso[:2]])[0]
+    assert np.isfinite(r.authority).all()
+    assert np.abs(r.authority).sum() == 0.0
+
+
+# ------------------------------------------------------ weight properties
+
+
+@given(st.lists(st.tuples(st.integers(0, 10**4), st.integers(0, 10**4)),
+                min_size=1, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_accel_weights_product_and_isolated(pairs):
+    """ca*ch == indeg*outdeg/deg^2 (the |diff|^p factors cancel exactly);
+    isolated nodes get 0 in both — the invariant the service's per-column
+    induced weights rely on."""
+    indeg = np.array([p[0] for p in pairs], float)
+    outdeg = np.array([p[1] for p in pairs], float)
+    ca, ch = accel_weights(indeg, outdeg)
+    deg = indeg + outdeg
+    expected = np.where(deg > 0, indeg * outdeg / np.maximum(deg, 1.0) ** 2,
+                        0.0)
+    assert np.allclose(ca * ch, expected, rtol=1e-12, atol=0)
+    assert (ca[deg == 0] == 0).all() and (ch[deg == 0] == 0).all()
