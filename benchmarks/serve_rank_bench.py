@@ -1,12 +1,17 @@
 """Serving benchmark: batched-V query ranking vs sequential per-query
-``accel_hits``, and warm vs cold starts.
+``accel_hits``, warm vs cold starts, and the sweep-backend axis.
 
 Acceptance targets (ISSUE 1): on a 10k-node synthetic webgraph the batched
 service sustains >= 3x the sequential per-query throughput, and batched
-scores match the per-query oracle to <= 1e-8 L1.
+scores match the per-query oracle to <= 1e-8 L1. ISSUE 2 adds the backend
+axis: every backend must hold the same oracle match, and ``--backend
+sharded`` additionally measures the dist.py collective ladder (dual_blocked
+must move no more wire bytes per sweep than replicated).
 
   PYTHONPATH=src python -m benchmarks.serve_rank_bench
-  PYTHONPATH=src python benchmarks/serve_rank_bench.py --n-queries 64 --v 8
+  PYTHONPATH=src python benchmarks/serve_rank_bench.py --backend bsr
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python benchmarks/serve_rank_bench.py --backend sharded
 """
 from __future__ import annotations
 
@@ -24,6 +29,27 @@ from repro.graph import WebGraphSpec, generate_webgraph  # noqa: E402
 from repro.serve import RankService, RankServiceConfig  # noqa: E402
 
 
+def measure_collective_ladder(svc, queries, v, n_devices=None, dtype_bytes=8):
+    """Compile one sweep per shard mode at this workload's padded shapes
+    and measure per-device wire bytes from the optimized HLO (the dist.py
+    ladder, measured rather than asserted)."""
+    from repro.graph.structure import next_pow2
+    from repro.serve.backends import ShardedSweepBackend
+
+    union = svc.extractor.extract_union(
+        [svc.extractor.extract(q) for q in queries[:v]])
+    n_pad = next_pow2(max(union.n_nodes + 1, 16))
+    src, dst = union.graph.src, union.graph.dst
+    w = np.ones(union.graph.n_edges)
+    out = {}
+    for mode in ("replicated", "dual_blocked"):
+        be = ShardedSweepBackend(mode=mode, n_devices=n_devices)
+        out[mode] = {"measured": be.measure_wire_bytes(n_pad, v, src, dst, w),
+                     "analytic": be.collective_bytes_per_sweep(
+                         n_pad, v, dtype_bytes)}
+    return n_pad, out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-nodes", type=int, default=10000)
@@ -34,6 +60,11 @@ def main():
     ap.add_argument("--v", type=int, default=8)
     ap.add_argument("--tol", type=float, default=1e-10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "sharded", "bsr", "auto"])
+    ap.add_argument("--shard-mode", default="dual_blocked",
+                    choices=["replicated", "dual_blocked"])
+    ap.add_argument("--shard-devices", type=int, default=None)
     args = ap.parse_args()
 
     g = generate_webgraph(WebGraphSpec(args.n_nodes, args.n_edges,
@@ -44,7 +75,13 @@ def main():
     queries = [rng.choice(g.n_nodes, size=args.roots, replace=False)
                for _ in range(args.n_queries)]
 
-    svc = RankService(g, RankServiceConfig(v_max=args.v, tol=args.tol))
+    def cfg(v_max=args.v):
+        return RankServiceConfig(v_max=v_max, tol=args.tol,
+                                 backend=args.backend,
+                                 shard_mode=args.shard_mode,
+                                 shard_devices=args.shard_devices)
+
+    svc = RankService(g, cfg())
 
     # --- sequential per-query oracle (accel_hits on each focused subgraph).
     # NB: this is the real cost of serving queries one at a time through the
@@ -60,7 +97,7 @@ def main():
     # --- batched-V cold service. A full warmup pass on a throwaway service
     # populates the module-level jit cache for every shape bucket, so the
     # timed run has zero compiles.
-    warmup = RankService(g, RankServiceConfig(v_max=args.v, tol=args.tol))
+    warmup = RankService(g, cfg())
     warmup.rank(queries)
     t0 = time.perf_counter()
     batched = svc.rank(queries)
@@ -70,8 +107,8 @@ def main():
 
     # --- steady-state: same service machinery at V=1 vs V=args.v, both
     # pre-compiled (padded buckets), so the ratio is the batching win alone
-    RankService(g, RankServiceConfig(v_max=1, tol=args.tol)).rank(queries)
-    svc1 = RankService(g, RankServiceConfig(v_max=1, tol=args.tol))
+    RankService(g, cfg(v_max=1)).rank(queries)
+    svc1 = RankService(g, cfg(v_max=1))
     t0 = time.perf_counter()
     svc1.rank(queries)
     t_v1 = time.perf_counter() - t0
@@ -90,6 +127,8 @@ def main():
     warm_iters = np.mean([r.iters for r in warm])
 
     print("name,us_per_call,derived")
+    print(f"serve/backend,0,kind={args.backend} "
+          f"batches={svc.stats['backend_batches']}")
     print(f"serve/sequential_per_query,{t_seq / args.n_queries * 1e6:.1f},"
           f"qps={qps_seq:.1f}")
     print(f"serve/batched_v{args.v},{t_bat / args.n_queries * 1e6:.1f},"
@@ -99,16 +138,36 @@ def main():
     print(f"serve/warm_refresh,{t_warm / args.n_queries * 1e6:.1f},"
           f"mean_iters warm={warm_iters:.1f} cold={cold_iters:.1f}")
     print(f"serve/oracle_match,0,max_l1={l1:.2e}")
-    ok_speed = speedup >= 3.0
+    from repro.kernels import resolve_interpret
+    # the >=3x gate targets compiled sweeps; BSR under the Pallas
+    # interpreter (non-TPU hosts) is a correctness vehicle, not a perf one
+    speed_gated = not (args.backend == "bsr" and resolve_interpret(None))
+    ok_speed = speedup >= 3.0 or not speed_gated
     ok_match = l1 <= 1e-8
     ok_warm = warm_iters <= cold_iters
-    print(f"ACCEPTANCE speedup>=3x: {'PASS' if ok_speed else 'FAIL'} "
+    ok_ladder = True
+    if args.backend == "sharded":
+        # the dist.py ladder, measured from compiled HLO at this workload's
+        # padded shapes: dual_blocked must move no more bytes than replicated
+        n_pad, ladder = measure_collective_ladder(svc, queries, args.v,
+                                                  args.shard_devices)
+        for mode, b in ladder.items():
+            print(f"serve/collective_{mode},0,n_pad={n_pad} "
+                  f"wire_bytes={b['measured']:.0f} "
+                  f"analytic={b['analytic']}")
+        ok_ladder = (ladder["dual_blocked"]["measured"]
+                     <= ladder["replicated"]["measured"])
+        print(f"ACCEPTANCE dual<=repl: {'PASS' if ok_ladder else 'FAIL'} "
+              f"({ladder['dual_blocked']['measured']:.0f} vs "
+              f"{ladder['replicated']['measured']:.0f} bytes)")
+    print(f"ACCEPTANCE speedup>=3x: "
+          f"{('PASS' if speedup >= 3.0 else 'FAIL') if speed_gated else 'SKIP (bsr interpreter mode)'} "
           f"({speedup:.1f}x)")
     print(f"ACCEPTANCE l1<=1e-8:   {'PASS' if ok_match else 'FAIL'} "
           f"({l1:.2e})")
     print(f"ACCEPTANCE warm<=cold: {'PASS' if ok_warm else 'FAIL'} "
           f"({warm_iters:.1f} vs {cold_iters:.1f})")
-    return 0 if (ok_speed and ok_match and ok_warm) else 1
+    return 0 if (ok_speed and ok_match and ok_warm and ok_ladder) else 1
 
 
 if __name__ == "__main__":

@@ -47,8 +47,18 @@ else:
             yield mesh
 
 
-def make_mesh(axis_shapes, axis_names):
-    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    ``devices`` restricts the mesh to an explicit device subset (e.g. the
+    serve path's S-of-8 parity ladder); ``jax.make_mesh`` has no portable
+    devices argument across the 0.4/0.5 split, so subsets go through the
+    ``Mesh`` constructor directly.
+    """
+    if devices is not None:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devices).reshape(axis_shapes), axis_names)
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(axis_shapes, axis_names,

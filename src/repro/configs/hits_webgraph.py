@@ -11,6 +11,10 @@ class RankingConfig:
     algorithm: str = "accel"      # "accel" | "hits"
     mode: str = "replicated"      # edge sharding strategy (see sparse.dist)
     dtype: str = "float32"
+    # serving defaults (repro.launch.serve_rank / serve.RankService):
+    # sweep backend for the batched column sweep (see serve.backends)
+    serve_backend: str = "auto"   # dense | sharded | bsr | auto
+    serve_shard_mode: str = "dual_blocked"  # replicated | dual_blocked
 
 
 CONFIG = RankingConfig()

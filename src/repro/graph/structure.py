@@ -12,6 +12,13 @@ from typing import Optional
 import numpy as np
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 2) — the shape-bucketing rule shared
+    by the serving pads (rank_service) and the per-shard edge buckets
+    (sparse.dist), so their jit caches key on the same sizes."""
+    return 1 << max(int(x) - 1, 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class Graph:
     """Directed graph as a COO edge list. Edges are (src -> dst)."""
@@ -148,7 +155,13 @@ class BSR:
 
 
 def to_bsr(g: Graph, bs: int = 128, values: Optional[np.ndarray] = None) -> BSR:
-    """Build BSR from COO. ``values`` (per-edge weights) default to 1.0."""
+    """Build BSR from COO. ``values`` (per-edge weights) default to 1.0.
+
+    Block storage follows ``values.dtype`` (float32 default): float64
+    weights must not quantize through an f32 intermediate — the serve
+    backends promise <=1e-10 parity on weighted sweeps.
+    """
+    val_dtype = np.float32 if values is None else np.asarray(values).dtype
     nbr = (g.n_nodes + bs - 1) // bs
     br = g.src // bs
     bc = g.dst // bs
@@ -157,20 +170,20 @@ def to_bsr(g: Graph, bs: int = 128, values: Optional[np.ndarray] = None) -> BSR:
     bkey_s = bkey[order]
     uniq, inverse_start = np.unique(bkey_s, return_index=True)
     nblocks = len(uniq)
-    blocks = np.zeros((max(nblocks, 1), bs, bs), np.float32)
+    blocks = np.zeros((max(nblocks, 1), bs, bs), val_dtype)
     vals = values if values is not None else np.ones(g.n_edges, np.float32)
     # scatter each edge into its block
     blk_of_edge = np.searchsorted(uniq, bkey)
     lr = (g.src % bs).astype(np.int64)
     lc = (g.dst % bs).astype(np.int64)
-    np.add.at(blocks, (blk_of_edge, lr, lc), vals.astype(np.float32))
+    np.add.at(blocks, (blk_of_edge, lr, lc), vals.astype(val_dtype))
     brow = (uniq // nbr).astype(np.int32)
     bcol = (uniq % nbr).astype(np.int32)
     counts = np.bincount(brow, minlength=nbr)
     row_ptr = np.zeros(nbr + 1, np.int64)
     np.cumsum(counts, out=row_ptr[1:])
     if nblocks == 0:
-        blocks = np.zeros((0, bs, bs), np.float32)
+        blocks = np.zeros((0, bs, bs), val_dtype)
         brow = np.zeros(0, np.int32)
         bcol = np.zeros(0, np.int32)
     return BSR(g.n_nodes, bs, blocks, brow, bcol, row_ptr)

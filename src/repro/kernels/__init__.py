@@ -6,13 +6,13 @@ seg_matmul: tiled segment-sum as one-hot MXU matmul (GNN aggregation,
           EmbeddingBag reduce, HITS edge scatter).
 Validated in interpret=True mode against ref.py oracles; TPU is the target.
 """
-from .bsr_spmm import bsr_scaled_matvec
+from .bsr_spmm import bsr_scaled_matvec, resolve_interpret
 from .ops import (DeviceBSR, bsr_matvec, build_tiled_segments,
                   hits_sweep_bsr, pad_empty_rows, pad_messages, seg_aggregate)
 from .seg_matmul import seg_matmul
 
 __all__ = [
-    "bsr_scaled_matvec", "DeviceBSR", "bsr_matvec", "build_tiled_segments",
-    "hits_sweep_bsr", "pad_empty_rows", "pad_messages", "seg_aggregate",
-    "seg_matmul",
+    "bsr_scaled_matvec", "resolve_interpret", "DeviceBSR", "bsr_matvec",
+    "build_tiled_segments", "hits_sweep_bsr", "pad_empty_rows",
+    "pad_messages", "seg_aggregate", "seg_matmul",
 ]

@@ -17,11 +17,28 @@ keeps the systolic array fed (multi-vector iteration).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Resolve the Pallas interpret mode for library callers.
+
+    Mosaic (interpret=False) only lowers on TPU, so the library default is
+    *auto*: compiled on TPU, interpreter everywhere else. Explicit ``True``/
+    ``False`` wins; the env var ``REPRO_PALLAS_INTERPRET`` (0/1) overrides
+    the auto choice without touching call sites (CI / debugging knob).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env:  # empty string == unset (the VAR= shell idiom): fall to auto
+        return env.lower() not in ("0", "false")
+    return jax.default_backend() != "tpu"
 
 
 def _bsr_kernel(idx_ref, block_ref, x_ref, cin_ref, y_ref, *, accum_dtype):
@@ -49,17 +66,12 @@ def _bsr_kernel(idx_ref, block_ref, x_ref, cin_ref, y_ref, *, accum_dtype):
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret", "accum_dtype"))
-def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
-                      interpret: bool = True, accum_dtype=jnp.float32):
-    """y[brow*bs:+bs] += blocks[k] @ (x ⊙ cin)[bcol*bs:+bs] over nonzero blocks.
-
-    blocks: (nblocks, bs, bs); idx: (nblocks, 2) int32 (brow, bcol), sorted
-    by brow with every block-row represented (pad empty rows via
-    ops.pad_empty_rows); x, cin: (n_pad, V), (n_pad, 1); returns (n_pad, V).
-    """
+def _bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int, interpret: bool,
+                       accum_dtype):
     nblocks = blocks.shape[0]
     n_pad = x.shape[0]
     v = x.shape[1]
+    cv = cin.shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -67,7 +79,7 @@ def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
         in_specs=[
             pl.BlockSpec((1, bs, bs), lambda k, idx_ref: (k, 0, 0)),
             pl.BlockSpec((bs, v), lambda k, idx_ref: (idx_ref[k, 1], 0)),
-            pl.BlockSpec((bs, 1), lambda k, idx_ref: (idx_ref[k, 1], 0)),
+            pl.BlockSpec((bs, cv), lambda k, idx_ref: (idx_ref[k, 1], 0)),
         ],
         out_specs=pl.BlockSpec((bs, v), lambda k, idx_ref: (idx_ref[k, 0], 0)),
     )
@@ -77,3 +89,20 @@ def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
         out_shape=jax.ShapeDtypeStruct((n_pad, v), x.dtype),
         interpret=interpret,
     )(idx, blocks, x, cin)
+
+
+def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
+                      interpret: bool | None = None,
+                      accum_dtype=jnp.float32):
+    """y[brow*bs:+bs] += blocks[k] @ (x ⊙ cin)[bcol*bs:+bs] over nonzero blocks.
+
+    blocks: (nblocks, bs, bs); idx: (nblocks, 2) int32 (brow, bcol), sorted
+    by brow with every block-row represented (pad empty rows via
+    ops.pad_empty_rows); x: (n_pad, V); cin: (n_pad, 1) shared diagonal or
+    (n_pad, V) per-column diagonals (the serve path's induced weights);
+    returns (n_pad, V). ``interpret=None`` resolves via ``resolve_interpret``
+    — compiled Pallas on TPU, interpreter elsewhere.
+    """
+    return _bsr_scaled_matvec(blocks, idx, x, cin, bs=bs,
+                              interpret=resolve_interpret(interpret),
+                              accum_dtype=accum_dtype)

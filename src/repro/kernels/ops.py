@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.structure import BSR, Graph, to_bsr
-from .bsr_spmm import bsr_scaled_matvec
+from .bsr_spmm import bsr_scaled_matvec, resolve_interpret
 from .seg_matmul import seg_matmul
 
 
@@ -45,16 +45,21 @@ class DeviceBSR:
 
     @staticmethod
     def build(g: Graph, bs: int = 128, transpose: bool = False,
-              dtype=jnp.float32) -> "DeviceBSR":
+              dtype=jnp.float32,
+              values: np.ndarray | None = None) -> "DeviceBSR":
+        """``values`` are per-edge weights in g's edge order (default 1.0);
+        ``reverse()`` preserves edge order, so they apply to either side."""
         gg = g.reverse() if transpose else g
-        bsr = pad_empty_rows(to_bsr(gg, bs))
+        bsr = pad_empty_rows(to_bsr(gg, bs, values=values))
         idx = np.stack([bsr.brow, bsr.bcol], axis=1).astype(np.int32)
         return DeviceBSR(jnp.asarray(bsr.blocks, dtype), jnp.asarray(idx),
                          bs, g.n_nodes, bsr.n_padded)
 
 
-def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool = True):
-    """y = A @ (x * cin). x: (N,) | (N, V); returns matching shape (N…)."""
+def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
+               accum_dtype=jnp.float32):
+    """y = A @ (x * cin). x: (N,) | (N, V); cin: None | (N,) shared diagonal
+    | (N, V) per-column diagonals; returns the shape matching x."""
     squeeze = x.ndim == 1
     xv = x[:, None] if squeeze else x
     pad = dbsr.n_pad - xv.shape[0]
@@ -62,15 +67,16 @@ def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool = True):
     if cin is None:
         cv = jnp.ones((dbsr.n_pad, 1), xv.dtype)
     else:
-        cv = jnp.pad(cin[:, None].astype(xv.dtype), ((0, pad), (0, 0)))
+        cv = cin[:, None] if cin.ndim == 1 else cin
+        cv = jnp.pad(cv.astype(xv.dtype), ((0, pad), (0, 0)))
     y = bsr_scaled_matvec(dbsr.blocks, dbsr.idx, xv, cv, bs=dbsr.bs,
-                          interpret=interpret)
+                          interpret=interpret, accum_dtype=accum_dtype)
     y = y[: dbsr.n_nodes]
     return y[:, 0] if squeeze else y
 
 
 def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,
-                   interpret: bool = True, dtype=jnp.float32):
+                   interpret: bool | None = None, dtype=jnp.float32):
     """Accelerated-HITS sweep on the BSR kernel path.
 
     a = Lᵀ(h ⊙ ch);  h' = L(a ⊙ ca);  h' ← h'/‖h'‖₁. Returns sweep(h)->(h',a)
@@ -132,10 +138,10 @@ def pad_messages(msgs: jnp.ndarray, seg) -> jnp.ndarray:
 
 
 def seg_aggregate(msgs, seg, *, bs: int = 128, n_nodes: int,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """Full segment-sum: messages (E, F) -> node aggregates (n_nodes, F)."""
     m = pad_messages(msgs, seg)
     y = seg_matmul(jnp.asarray(seg["blkid"]), m, jnp.asarray(seg["off"]),
                    jnp.asarray(seg["valid"]), seg["n_blocks"], bs=bs,
-                   interpret=interpret)
+                   interpret=resolve_interpret(interpret))
     return y[:n_nodes]

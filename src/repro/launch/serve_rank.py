@@ -51,6 +51,15 @@ def main():
     ap.add_argument("--tol", type=float, default=1e-10)
     ap.add_argument("--topk", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    from ..configs.hits_webgraph import CONFIG
+    ap.add_argument("--backend", default=CONFIG.serve_backend,
+                    choices=["dense", "sharded", "bsr", "auto"],
+                    help="sweep backend (see repro.serve.backends)")
+    ap.add_argument("--shard-mode", default=CONFIG.serve_shard_mode,
+                    choices=["replicated", "dual_blocked"],
+                    help="sharded backend edge-shard strategy")
+    ap.add_argument("--shard-devices", type=int, default=None,
+                    help="sharded backend device count (default: all)")
     args = ap.parse_args()
 
     from ..graph import WebGraphSpec, generate_webgraph, paper_dataset
@@ -64,15 +73,20 @@ def main():
     print(f"graph: N={g.n_nodes} E={g.n_edges} "
           f"dangling={g.dangling_fraction():.1%}")
 
-    svc = RankService(g, RankServiceConfig(v_max=args.v, tol=args.tol))
+    def cfg():
+        return RankServiceConfig(v_max=args.v, tol=args.tol,
+                                 backend=args.backend,
+                                 shard_mode=args.shard_mode,
+                                 shard_devices=args.shard_devices)
+
+    svc = RankService(g, cfg())
     rng = np.random.default_rng(args.seed)
     stream = zipf_query_stream(rng, g.n_nodes, args.requests, args.roots,
                                vocab=args.vocab)
 
     # warm the compile caches so the loop measures serving, not tracing
     # (on a fresh service so the measured run's cache starts cold)
-    RankService(g, RankServiceConfig(v_max=args.v, tol=args.tol)).rank(
-        stream[: args.v])
+    RankService(g, cfg()).rank(stream[: args.v])
     t0 = time.time()
     results = svc.rank(stream)
     dt = time.time() - t0
@@ -80,7 +94,8 @@ def main():
     s = svc.stats
     iters = [r.iters for r in results if r.iters > 0]
     print(f"served {len(results)} queries in {dt:.2f}s "
-          f"({len(results) / dt:.1f} q/s, batch width {args.v})")
+          f"({len(results) / dt:.1f} q/s, batch width {args.v}, "
+          f"backend {args.backend}: {s['backend_batches']})")
     print(f"cache: {s['hit']} hits / {s['warm']} warm / {s['cold']} cold "
           f"({s['hit'] / max(s['queries'], 1):.1%} hit rate)")
     if iters:

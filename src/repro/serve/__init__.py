@@ -1,3 +1,6 @@
+from .backends import (BACKENDS, BsrSweepBackend, DenseSweepBackend,
+                       ShardedSweepBackend, SweepBackend, SweepBatch,
+                       make_backend, select_backend)
 from .kvquant import (dequantize_kv, init_quant_cache, quant_decode_attention,
                       quantize_kv, update_quant_cache)
 from .rank_service import (QueryResult, RankService, RankServiceConfig)
@@ -6,4 +9,7 @@ __all__ = [
     "dequantize_kv", "init_quant_cache", "quant_decode_attention",
     "quantize_kv", "update_quant_cache",
     "QueryResult", "RankService", "RankServiceConfig",
+    "BACKENDS", "SweepBackend", "SweepBatch", "DenseSweepBackend",
+    "ShardedSweepBackend", "BsrSweepBackend", "make_backend",
+    "select_backend",
 ]

@@ -1,0 +1,354 @@
+"""Pluggable sweep backends for the query-ranking service.
+
+``RankService`` assembles one padded union-subgraph batch per traversal —
+(n_pad, V) start vectors, per-column induced Ca/Ch weights and base-set
+masks, and a sentinel-padded edge list — and hands it to a backend that
+runs the masked multi-column accelerated-HITS convergence loop:
+
+* ``dense``   — single-device ``core.hits.hits_sweep_cols`` under a jitted
+                ``lax.while_loop`` (the PR-1 path, extracted).
+* ``sharded`` — the same column sweep lowered onto a device mesh through
+                ``sparse.dist.make_dist_hits_sweep_cols``; edge shards
+                follow the dist ladder (``replicated``: 2 psums/sweep,
+                ``dual_blocked``: 2 all-gathers/sweep).
+* ``bsr``     — the Pallas block-sparse kernel (``kernels.bsr_spmm``) with
+                per-column fused diagonals, after ``core.reordering``
+                blocking (non-dangling-first node order so nonzeros cluster
+                into dense blocks) — the dense-block accelerator regime.
+
+All backends compute the same fixed point (the parity suite holds them to
+<=1e-10 L1 of the dense oracle), so everything above the interface —
+batching, caching, warm starts, and every later scaling PR — is
+backend-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compat import make_mesh, set_mesh
+from ..core.hits import EdgeList, hits_sweep_cols
+from ..core.reordering import blocking_permutation
+from ..graph.structure import Graph
+from ..kernels.bsr_spmm import resolve_interpret
+from ..kernels.ops import DeviceBSR, bsr_matvec
+from ..sparse.dist import (build_edge_shards_cols,
+                           collective_bytes_per_sweep_cols,
+                           make_dist_hits_sweep_cols,
+                           wire_bytes_from_collectives)
+from ..sparse.spmv import normalize_l1, spmv_dst
+
+BACKENDS = ("dense", "sharded", "bsr")
+
+# auto heuristic: sharding pays once the union subgraph's per-sweep edge
+# work dwarfs the collective latency; BSR pays in the dense-block regime
+# when the Pallas path actually compiles (TPU)
+_SHARD_MIN_EDGES = 4096
+_BSR_MIN_EDGES_PER_NODE = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepBatch:
+    """One padded serving batch (host arrays; see RankService._rank_batch).
+
+    h0/ca/ch/mask: (n_pad, V); src/dst/w: (e_pad,) with sentinel edges
+    pointing at the dead pad row n_pad-1 carrying w=0.
+    """
+
+    h0: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    ca: np.ndarray
+    ch: np.ndarray
+    mask: np.ndarray
+    tol: float
+    max_iter: int
+    dtype: object
+
+
+class SweepBackend:
+    """Interface: converge one batch to (h, a, conv) numpy arrays.
+
+    ``h``/``a`` are (n_pad, V) — per-column L1-normalized hub and authority
+    vectors at the fixed point; ``conv[j]`` is the sweep at which column j
+    first hit tol (== max_iter when it never did).
+    """
+
+    name: str = "?"
+
+    def converge(self, batch: SweepBatch
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------- dense
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter):
+    """On-device convergence loop for V masked columns.
+
+    Per-column L1 residuals; ``conv[j]`` records the sweep at which column
+    j first hit tol (-1 while running). All columns keep sweeping until the
+    last converges — converged columns sit at their fixed point.
+    Returns (h, a, conv).
+    """
+    edges = EdgeList(src, dst, h0.shape[0], w)
+    sweep = hits_sweep_cols(edges, ca, ch, mask)
+
+    def body(state):
+        h, _a, k, conv = state
+        h_new, a = sweep(h)
+        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
+        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+        return h_new, a, k + 1, conv
+
+    def cond(state):
+        _h, _a, k, conv = state
+        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+    init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
+            jnp.full((h0.shape[1],), -1, jnp.int32))
+    h, _a, k, conv = jax.lax.while_loop(cond, body, init)
+    conv = jnp.where(conv < 0, k, conv)  # hit max_iter
+    # finalize: recompute authority from converged h (same as hits._finalize)
+    a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
+    return h, normalize_l1(a, axis=0), conv
+
+
+class DenseSweepBackend(SweepBackend):
+    """Single-device gather/segment-sum path (the semantic reference)."""
+
+    name = "dense"
+
+    def converge(self, b: SweepBatch):
+        h, a, conv = _converge_batch(
+            jnp.asarray(b.h0, b.dtype),
+            jnp.asarray(b.src), jnp.asarray(b.dst),
+            jnp.asarray(b.w, b.dtype),
+            jnp.asarray(b.ca, b.dtype), jnp.asarray(b.ch, b.dtype),
+            jnp.asarray(b.mask, b.dtype), b.tol, b.max_iter)
+        return np.asarray(h), np.asarray(a), np.asarray(conv)
+
+
+# ----------------------------------------------------------------- sharded
+
+# jitted converge per (mesh, mode, shape bucket) — shared across services
+_SHARDED_JIT: Dict[tuple, object] = {}
+
+
+def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes):
+    key = (mesh, mode, n_pad, per, v, max_iter, np.dtype(dtype).str)
+    fn = _SHARDED_JIT.get(key)
+    if fn is not None:
+        return fn
+    smapped = make_dist_hits_sweep_cols(mesh, mode, n_pad, axes=axes)
+
+    def converge(h0, ca, ch, m, eargs, tol):
+        lead = tuple(range(h0.ndim - 1))  # (0,) full | (0, 1) blocked
+
+        def body(state):
+            h, _a, k, conv = state
+            h_new, a = smapped(h, ca, ch, m, *eargs)
+            delta = jnp.sum(jnp.abs(h_new - h), axis=lead)
+            conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+            return h_new, a, k + 1, conv
+
+        def cond(state):
+            _h, _a, k, conv = state
+            return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+        init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
+                jnp.full((v,), -1, jnp.int32))
+        h, _a, k, conv = jax.lax.while_loop(cond, body, init)
+        conv = jnp.where(conv < 0, k, conv)
+        # finalize: one more masked authority half-step from converged h
+        _h2, a = smapped(h, ca, ch, m, *eargs)
+        a = a / (jnp.sum(jnp.abs(a), axis=lead, keepdims=True) + 1e-30)
+        return h, a, conv
+
+    fn = jax.jit(converge)
+    _SHARDED_JIT[key] = fn
+    return fn
+
+
+class ShardedSweepBackend(SweepBackend):
+    """Mesh-sharded column sweep over the dist.py edge-sharding ladder."""
+
+    name = "sharded"
+
+    def __init__(self, mode: str = "dual_blocked",
+                 n_devices: Optional[int] = None, axis: str = "data"):
+        if mode not in ("replicated", "dual_blocked"):
+            raise ValueError(f"unknown shard mode {mode!r}")
+        devices = jax.devices()
+        s = len(devices) if n_devices is None else int(n_devices)
+        if not 1 <= s <= len(devices):
+            raise ValueError(f"n_devices={s} outside [1, {len(devices)}]")
+        self.mode = mode
+        self.n_shards = s
+        self.axes = (axis,)
+        self.mesh = make_mesh((s,), self.axes, devices=devices[:s])
+
+    def collective_bytes_per_sweep(self, n_pad: int, v: int,
+                                   itemsize: int = 8) -> int:
+        """Analytic per-device wire bytes per sweep (the dist ladder)."""
+        return collective_bytes_per_sweep_cols(self.mode, n_pad, v,
+                                               self.n_shards, itemsize)
+
+    def _layout(self, shards, h0, ca, ch, m, dtype):
+        """Device layout (h0, ca, ch, m, eargs) for the cols sweep.
+
+        The single owner of the sweep's calling convention: edge-arg
+        ordering ((src, dst, w) x (a, h) for dual_blocked) and the blocked
+        h layout. dual_blocked pads node rows to nb*S >= n_pad — non-pow2
+        device counts get dead extra rows (zero weights/mask/h0), like the
+        service's pad row.
+        """
+        if self.mode == "replicated":
+            eargs = (jnp.asarray(shards["src"]), jnp.asarray(shards["dst"]),
+                     jnp.asarray(shards["w"], dtype))
+            return (jnp.asarray(h0, dtype), jnp.asarray(ca, dtype),
+                    jnp.asarray(ch, dtype), jnp.asarray(m, dtype), eargs)
+        nb = shards["nb"]
+        n_rows, v = np.shape(h0)
+        rows = ((0, nb * self.n_shards - n_rows), (0, 0))
+        h0, ca, ch, m = (np.pad(np.asarray(x), rows) for x in (h0, ca, ch, m))
+        eargs = ()
+        for part in (shards["a"], shards["h"]):
+            eargs += (jnp.asarray(part["src"]), jnp.asarray(part["dst"]),
+                      jnp.asarray(part["w"], dtype))
+        return (jnp.asarray(h0.reshape(self.n_shards, nb, v), dtype),
+                jnp.asarray(ca, dtype), jnp.asarray(ch, dtype),
+                jnp.asarray(m, dtype), eargs)
+
+    def converge(self, b: SweepBatch):
+        n_pad, v = b.h0.shape
+        shards = build_edge_shards_cols(b.src, b.dst, b.w, n_pad,
+                                        self.n_shards, self.mode)
+        h0, ca, ch, m, eargs = self._layout(shards, b.h0, b.ca, b.ch,
+                                            b.mask, b.dtype)
+        fn = _sharded_converge(self.mesh, self.mode, n_pad, shards["per"], v,
+                               b.max_iter, b.dtype, self.axes)
+        with set_mesh(self.mesh):
+            h, a, conv = fn(h0, ca, ch, m, eargs, b.tol)
+        h = np.asarray(h).reshape(-1, v)[:n_pad]
+        a = np.asarray(a).reshape(-1, v)[:n_pad]
+        return h, a, np.asarray(conv)
+
+    def measure_wire_bytes(self, n_pad: int, v: int, src, dst, w,
+                           dtype=jnp.float64) -> float:
+        """Compile ONE sweep at these shapes and measure per-device ring
+        wire bytes from the optimized HLO (the bench/test ladder probe)."""
+        from ..launch.hlo_analysis import collective_bytes
+        shards = build_edge_shards_cols(src, dst, w, n_pad, self.n_shards,
+                                        self.mode)
+        zeros = np.zeros((n_pad, v))
+        h0, ca, ch, m, eargs = self._layout(shards, zeros, zeros, zeros,
+                                            zeros, dtype)
+        smapped = make_dist_hits_sweep_cols(self.mesh, self.mode, n_pad,
+                                            axes=self.axes)
+        with set_mesh(self.mesh):
+            compiled = jax.jit(smapped).lower(h0, ca, ch, m,
+                                              *eargs).compile()
+        return wire_bytes_from_collectives(
+            collective_bytes(compiled.as_text())["by_kind"], self.n_shards)
+
+
+# --------------------------------------------------------------------- bsr
+
+
+class BsrSweepBackend(SweepBackend):
+    """Pallas block-sparse path for the dense-block regime.
+
+    The union subgraph is renumbered by ``core.reordering``'s blocking
+    permutation (non-dangling pages first, degree-descending) so structural
+    nonzeros cluster into dense (bs x bs) blocks, then each half-step is one
+    ``bsr_scaled_matvec`` with the column's induced diagonal fused into the
+    block matmul prologue. The convergence loop runs host-side: per-sweep
+    kernel dispatches dominate only for tiny subgraphs, and the loop must
+    see per-column residuals anyway.
+    """
+
+    name = "bsr"
+
+    def __init__(self, bs: int = 128, interpret: Optional[bool] = None):
+        self.bs = bs
+        self.interpret = interpret
+
+    def converge(self, b: SweepBatch):
+        n_pad, v = b.h0.shape
+        real = np.asarray(b.w) != 0  # drop sentinel padding edges
+        src, dst = np.asarray(b.src)[real], np.asarray(b.dst)[real]
+        w = np.asarray(b.w)[real]
+        perm = blocking_permutation(src, dst, n_pad)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(n_pad, dtype=np.int32)
+        g = Graph(n_pad, inv[src], inv[dst])
+        bs = min(self.bs, n_pad)
+        accum = b.dtype if np.dtype(b.dtype) == np.float64 else jnp.float32
+        lt = DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype, values=w)
+        lfwd = DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
+                               values=w)
+        ca = jnp.asarray(b.ca[perm], b.dtype)
+        ch = jnp.asarray(b.ch[perm], b.dtype)
+        m = jnp.asarray(b.mask[perm], b.dtype)
+        h = jnp.asarray(b.h0[perm], b.dtype)
+        conv = np.full(v, -1, np.int32)
+        k = 0
+        while k < b.max_iter and (conv < 0).any():
+            a = bsr_matvec(lt, h, ch, self.interpret, accum) * m
+            h_new = bsr_matvec(lfwd, a, ca, self.interpret, accum) * m
+            h_new = normalize_l1(h_new, axis=0)
+            delta = np.asarray(jnp.sum(jnp.abs(h_new - h), axis=0))
+            k += 1
+            conv = np.where((conv < 0) & (delta <= b.tol), k, conv)
+            h = h_new
+        conv = np.where(conv < 0, k, conv)
+        a = bsr_matvec(lt, h, ch, self.interpret, accum) * m
+        a = normalize_l1(a, axis=0)
+        return (np.asarray(h)[inv], np.asarray(a)[inv], conv)
+
+
+# ------------------------------------------------------- selection/factory
+
+
+def select_backend(n_union: int, e_union: int,
+                   n_devices: Optional[int] = None,
+                   pallas_compiled: Optional[bool] = None) -> str:
+    """The ``auto`` heuristic: pick a backend from subgraph density and
+    device count.
+
+    Multi-device meshes shard once the union subgraph carries enough edges
+    to amortize per-sweep collectives; single-device dense-block subgraphs
+    take the Pallas BSR path when it actually compiles (TPU — interpreter
+    mode would serve slower than the XLA dense path); everything else stays
+    dense.
+    """
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if pallas_compiled is None:
+        pallas_compiled = not resolve_interpret(None)
+    if n_devices > 1 and e_union >= _SHARD_MIN_EDGES:
+        return "sharded"
+    if pallas_compiled and e_union >= _BSR_MIN_EDGES_PER_NODE * max(n_union, 1):
+        return "bsr"
+    return "dense"
+
+
+def make_backend(kind: str, *, shard_mode: str = "dual_blocked",
+                 shard_devices: Optional[int] = None, bsr_block: int = 128,
+                 interpret: Optional[bool] = None) -> SweepBackend:
+    if kind == "dense":
+        return DenseSweepBackend()
+    if kind == "sharded":
+        return ShardedSweepBackend(mode=shard_mode, n_devices=shard_devices)
+    if kind == "bsr":
+        return BsrSweepBackend(bs=bsr_block, interpret=interpret)
+    raise ValueError(f"unknown backend {kind!r} (want one of {BACKENDS})")

@@ -20,23 +20,25 @@ Serves per-query accelerated-HITS rankings over focused subgraphs:
 
 Shapes are padded to power-of-two buckets so the jitted convergence loop
 compiles once per bucket, not once per query mix.
+
+The convergence loop itself is pluggable (see ``serve.backends``): the
+``dense`` single-device path, the mesh-``sharded`` path over the
+``sparse.dist`` edge-sharding ladder, and the Pallas ``bsr`` block-sparse
+path all consume the same padded batch and match each other to <=1e-10 L1.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.hits import EdgeList, hits_sweep_cols
 from ..core.weights import accel_weights
-from ..graph.structure import Graph
+from ..graph.structure import Graph, next_pow2
 from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor, root_set_key
-from ..sparse.spmv import normalize_l1, spmv_dst
+from .backends import SweepBackend, SweepBatch, make_backend, select_backend
 
 
 @dataclasses.dataclass
@@ -49,6 +51,11 @@ class RankServiceConfig:
     cache_size: int = 512      # LRU entries (root-set hash -> scores)
     warm_min_overlap: float = 0.5  # min score coverage to warm-start
     dtype: object = jnp.float64
+    backend: str = "dense"     # dense | sharded | bsr | auto (see backends)
+    shard_mode: str = "dual_blocked"   # sharded: replicated | dual_blocked
+    shard_devices: Optional[int] = None  # sharded: device count (None: all)
+    bsr_block: int = 128       # bsr: block size (MXU-aligned on TPU)
+    interpret: Optional[bool] = None   # bsr: Pallas interpret override
 
 
 @dataclasses.dataclass
@@ -75,42 +82,6 @@ class _CacheEntry:
     hub: np.ndarray
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 1).bit_length()
-
-
-@partial(jax.jit, static_argnames=("max_iter",))
-def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter):
-    """On-device convergence loop for V masked columns.
-
-    Per-column L1 residuals; ``conv[j]`` records the sweep at which column
-    j first hit tol (-1 while running). All columns keep sweeping until the
-    last converges — converged columns sit at their fixed point.
-    Returns (h, a, conv).
-    """
-    edges = EdgeList(src, dst, h0.shape[0], w)
-    sweep = hits_sweep_cols(edges, ca, ch, mask)
-
-    def body(state):
-        h, _a, k, conv = state
-        h_new, a = sweep(h)
-        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
-        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
-        return h_new, a, k + 1, conv
-
-    def cond(state):
-        _h, _a, k, conv = state
-        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
-
-    init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
-            jnp.full((h0.shape[1],), -1, jnp.int32))
-    h, _a, k, conv = jax.lax.while_loop(cond, body, init)
-    conv = jnp.where(conv < 0, k, conv)  # hit max_iter
-    # finalize: recompute authority from converged h (same as hits._finalize)
-    a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
-    return h, normalize_l1(a, axis=0), conv
-
-
 class RankService:
     """Batched, cached, warm-starting query-ranking front end over one graph."""
 
@@ -133,14 +104,41 @@ class RankService:
                 f"residual floor (x64 disabled?); clamping to {min_tol:g}",
                 stacklevel=2)
             self.cfg = dataclasses.replace(self.cfg, tol=min_tol)
+        if self.cfg.backend not in ("dense", "sharded", "bsr", "auto"):
+            raise ValueError(f"unknown backend {self.cfg.backend!r}")
         self.extractor = SubgraphExtractor(g, self.cfg.out_cap,
                                            self.cfg.in_cap)
+        self._backends: Dict[str, SweepBackend] = {}
         self._cache: OrderedDict[str, _CacheEntry] = OrderedDict()
         # last converged scores per global node — the warm-start table
         self._warm_h = np.zeros(g.n_nodes)
         self._warm_seen = np.zeros(g.n_nodes, bool)
         self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
-                      "cold": 0, "sweeps": 0}
+                      "cold": 0, "sweeps": 0, "backend_batches": {}}
+
+    # -- backends ---------------------------------------------------------
+
+    def _backend_for(self, n_union: int, e_union: int) -> SweepBackend:
+        """Resolve the configured (or ``auto``-selected) sweep backend.
+
+        Instances are cached per kind: ``auto`` may route small union
+        subgraphs dense and large ones sharded within one service without
+        rebuilding meshes or BSR state machinery.
+        """
+        kind = self.cfg.backend
+        if kind == "auto":
+            from ..kernels import resolve_interpret
+            kind = select_backend(
+                n_union, e_union, n_devices=self.cfg.shard_devices,
+                pallas_compiled=not resolve_interpret(self.cfg.interpret))
+        be = self._backends.get(kind)
+        if be is None:
+            be = make_backend(kind, shard_mode=self.cfg.shard_mode,
+                              shard_devices=self.cfg.shard_devices,
+                              bsr_block=self.cfg.bsr_block,
+                              interpret=self.cfg.interpret)
+            self._backends[kind] = be
+        return be
 
     # -- cache ------------------------------------------------------------
 
@@ -214,8 +212,8 @@ class RankService:
         union = self.extractor.extract_union(subs)
         nodes_u = union.nodes
         n_u, e_u = len(nodes_u), union.graph.n_edges
-        n_pad = _next_pow2(max(n_u + 1, 16))  # +1: a guaranteed-dead pad row
-        e_pad = _next_pow2(max(e_u, 16))
+        n_pad = next_pow2(max(n_u + 1, 16))  # +1: a guaranteed-dead pad row
+        e_pad = next_pow2(max(e_u, 16))
         V = self.cfg.v_max
 
         src = np.full(e_pad, n_pad - 1, np.int32)
@@ -245,18 +243,14 @@ class RankService:
             h0[:n_u, j], statuses[j] = self._start_vector(fs, entry, m, loc)
             self.stats[statuses[j]] += 1
 
-        h, a, conv = _converge_batch(
-            jnp.asarray(h0, self._dtype),
-            jnp.asarray(src), jnp.asarray(dst),
-            jnp.asarray(w, self._dtype),
-            jnp.asarray(ca, self._dtype),
-            jnp.asarray(ch, self._dtype),
-            jnp.asarray(mask, self._dtype),
-            self.cfg.tol, self.cfg.max_iter)
-        h = np.asarray(h)
-        a = np.asarray(a)
-        conv = np.asarray(conv)
+        backend = self._backend_for(n_u, e_u)
+        h, a, conv = backend.converge(SweepBatch(
+            h0=h0, src=src, dst=dst, w=w, ca=ca, ch=ch, mask=mask,
+            tol=self.cfg.tol, max_iter=self.cfg.max_iter,
+            dtype=self._dtype))
         self.stats["sweeps"] += int(conv.max(initial=0))
+        bb = self.stats["backend_batches"]
+        bb[backend.name] = bb.get(backend.name, 0) + 1
 
         for j, (slot, fs, _entry) in enumerate(todo):
             loc = np.searchsorted(nodes_u, fs.nodes)

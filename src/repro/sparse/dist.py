@@ -26,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import axis_size, shard_map
 from ..graph.partition import partition_edges, partition_edges_by_dst_block
-from ..graph.structure import Graph
+from ..graph.structure import Graph, next_pow2
 
 
 def _seg_sum(x_g, idx, n):
@@ -188,6 +188,187 @@ def make_dist_hits_sweep(mesh, shards, n: int, axes=("data",),
         return smapped, h0, args
 
     raise ValueError(f"unsupported mode {mode}")
+
+
+# ------------------------------------------------------------- serve path
+#
+# The serving column sweep (core.hits.hits_sweep_cols) distributes the same
+# way as the single-vector ladder above, but with two twists: vectors are
+# (N, V) — V independent query columns per traversal — and the per-column
+# induced weights/masks change every serving batch, so they must arrive as
+# runtime ARGS instead of being baked into the sweep closure.
+
+
+def build_edge_shards_cols(src, dst, w, n_pad: int, n_shards: int,
+                           mode: str = "replicated"):
+    """Edge shards for the padded union-subgraph column sweep.
+
+    Unlike ``build_edge_shards`` (whole-crawl preprocessing, exact shapes),
+    serving rebuilds shards per batch, so per-shard edge lengths pad to the
+    next power of two — the jitted convergence loop compiles once per
+    (n_pad, per, V) bucket, not once per query mix. Sentinel edges carry
+    w=0 and point at rows whose weights are identically zero, so they
+    contribute nothing to either half-step.
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    w = np.asarray(w)
+    # strip sentinel (w=0) padding edges up front: under dual_blocked they
+    # would all land in the dead pad row's shard and inflate every shard's
+    # bucket to ~E_pad (up to S-fold wasted sweep work)
+    keep = w != 0
+    if not keep.all():
+        src, dst, w = src[keep], dst[keep], w[keep]
+    e = len(src)
+
+    if mode == "replicated":
+        chunk = -(-e // n_shards) if e else 1
+        per = next_pow2(chunk)
+        s_a = np.full((n_shards, per), n_pad - 1, np.int32)
+        d_a = np.full((n_shards, per), n_pad - 1, np.int32)
+        w_a = np.zeros((n_shards, per), w.dtype)
+        for s in range(n_shards):
+            sel = slice(s * chunk, min((s + 1) * chunk, e))
+            c = max(sel.stop - sel.start, 0)
+            s_a[s, :c] = src[sel]
+            d_a[s, :c] = dst[sel]
+            w_a[s, :c] = w[sel]
+        return {"mode": "replicated", "src": s_a, "dst": d_a, "w": w_a,
+                "per": per}
+
+    if mode == "dual_blocked":
+        nb = -(-n_pad // n_shards)
+
+        def blocked(key):
+            shard_of = key // nb
+            order = np.argsort(shard_of, kind="stable")
+            counts = np.bincount(shard_of, minlength=n_shards)[:n_shards]
+            return order, counts
+
+        a_order, a_counts = blocked(dst)
+        h_order, h_counts = blocked(src)
+        per = next_pow2(max(int(a_counts.max(initial=1)),
+                             int(h_counts.max(initial=1)), 1))
+
+        def pack(order, counts, gather_ids, scatter_ids):
+            # scatter ids must stay inside the shard's own block; sentinel
+            # scatter = block start, sentinel gather = the dead pad row
+            g = np.full((n_shards, per), n_pad - 1, np.int32)
+            sc = np.zeros((n_shards, per), np.int32)
+            ww = np.zeros((n_shards, per), w.dtype)
+            start = 0
+            for s in range(n_shards):
+                c = int(counts[s])
+                sel = order[start:start + c]
+                g[s, :c] = gather_ids[sel]
+                sc[s, :c] = scatter_ids[sel]
+                sc[s, c:] = s * nb
+                ww[s, :c] = w[sel]
+                start += c
+            return {"src": g, "dst": sc, "w": ww}
+
+        return {"mode": "dual_blocked", "nb": nb, "per": per,
+                "a": pack(a_order, a_counts, src, dst),   # gather h at src
+                "h": pack(h_order, h_counts, dst, src)}   # gather a at dst
+
+    raise ValueError(mode)
+
+
+def make_dist_hits_sweep_cols(mesh, mode: str, n_pad: int, axes=("data",)):
+    """Multi-column (N, V) distributed sweep matching ``hits_sweep_cols``.
+
+    Per-column ca/ch/mask are runtime args (replicated): each half-step's
+    scatter output is masked to the column's base set and h is
+    L1-normalized per column, so every column computes exactly the induced
+    operator of its own focused subgraph — same math, S devices.
+
+    Layouts: ``replicated`` iterates the full (n_pad, V) vector on every
+    device (2 psums/sweep, the 4N rung); ``dual_blocked`` iterates a
+    (S, nb, V) blocked vector (2 all-gathers/sweep, the 2N rung).
+    """
+    ax = axes if len(axes) > 1 else axes[0]
+    espec = P(ax, None)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    if mode == "replicated":
+
+        def sweep(h, ca, ch, m, src, dst, w):
+            wm = w[0][:, None]
+            a = jax.lax.psum(
+                _seg_sum(jnp.take(h * ch, src[0], axis=0) * wm, dst[0], n_pad),
+                ax) * m
+            h_new = jax.lax.psum(
+                _seg_sum(jnp.take(a * ca, dst[0], axis=0) * wm, src[0], n_pad),
+                ax) * m
+            h_new = h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=True)
+                             + 1e-30)
+            return h_new, a
+
+        return shard_map(
+            sweep, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), espec, espec, espec),
+            out_specs=(P(), P()))
+
+    if mode == "dual_blocked":
+        nb = -(-n_pad // n_shards)
+        bspec = P(ax, None, None)
+
+        def sweep(h_blk, ca, ch, m, asrc, adst, aw, hsrc, hdst, hw):
+            # h_blk local view: (1, nb, V). Rebuild the full (n_pad, V).
+            h_full = jax.lax.all_gather(h_blk[0], ax, tiled=True)
+            blk = _flat_axis_index(axes)
+            m_blk = jax.lax.dynamic_slice_in_dim(m, blk * nb, nb, axis=0)
+            hw_g = jnp.take(h_full * ch, asrc[0], axis=0) * aw[0][:, None]
+            a_blk = _seg_sum(hw_g, adst[0] - blk * nb, nb) * m_blk
+            a_full = jax.lax.all_gather(a_blk, ax, tiled=True)
+            aw_g = jnp.take(a_full * ca, hsrc[0], axis=0) * hw[0][:, None]
+            h_new_blk = _seg_sum(aw_g, hdst[0] - blk * nb, nb) * m_blk
+            tot = jax.lax.psum(jnp.sum(jnp.abs(h_new_blk), axis=0), ax)
+            h_new_blk = h_new_blk / (tot + 1e-30)
+            return h_new_blk[None], a_blk[None]
+
+        return shard_map(
+            sweep, mesh=mesh,
+            in_specs=(bspec, P(), P(), P()) + (espec,) * 6,
+            out_specs=(bspec, bspec))
+
+    raise ValueError(f"unsupported mode {mode}")
+
+
+# ring-algorithm wire bytes per HLO collective OUTPUT byte: an all-reduce
+# is reduce-scatter + all-gather (~2(S-1)/S), one-phase collectives (S-1)/S
+_RING_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                     "reduce-scatter": 1.0, "all-to-all": 1.0,
+                     "collective-permute": 1.0}
+
+
+def wire_bytes_from_collectives(by_kind: dict, n_shards: int) -> float:
+    """Convert ``launch.hlo_analysis.collective_bytes``'s per-kind output
+    sizes into ring wire bytes — the metric the ladder above ranks by."""
+    if n_shards <= 1:
+        return 0.0
+    frac = (n_shards - 1) / n_shards
+    return sum(b * frac * _RING_WIRE_FACTOR.get(k, 1.0)
+               for k, b in by_kind.items())
+
+
+def collective_bytes_per_sweep_cols(mode: str, n_pad: int, v: int,
+                                    n_shards: int, itemsize: int = 8) -> int:
+    """Analytic per-device wire bytes per column sweep — the dist ladder.
+
+    Ring-algorithm model (matching ``wire_bytes_from_collectives``):
+    replicated = 2 all-reduces at 2·(S-1)/S bytes per payload byte
+    (~4·N·V); dual_blocked = 2 all-gathers at (S-1)/S (~2·N·V).
+    """
+    if n_shards <= 1:
+        return 0
+    frac = (n_shards - 1) / n_shards
+    payload = n_pad * v * itemsize
+    if mode == "replicated":
+        return int(2 * 2 * payload * frac)
+    if mode == "dual_blocked":
+        return int(2 * payload * frac)
+    raise ValueError(mode)
 
 
 def make_dryrun_rank_sweep(mesh, n: int, axes, mode: str = "baseline",
