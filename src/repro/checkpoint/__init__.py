@@ -1,3 +1,3 @@
-from .checkpoint import latest_step, prune, restore, save
+from .checkpoint import latest_step, prune, restore, restore_arrays, save
 
-__all__ = ["latest_step", "prune", "restore", "save"]
+__all__ = ["latest_step", "prune", "restore", "restore_arrays", "save"]

@@ -82,6 +82,18 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 def restore(ckpt_dir: str, template, step: Optional[int] = None):
     """Returns (tree, step, extra). ``template`` provides structure+dtypes."""
+    arrays, step, extra = restore_arrays(ckpt_dir, step)
+    return _unflatten_into(template, arrays), step, extra
+
+
+def restore_arrays(ckpt_dir: str, step: Optional[int] = None):
+    """Template-free restore: (flat {path-key: array}, step, extra).
+
+    A restarted process often has no live tree to use as a template (e.g.
+    the serving cache, whose entries' shapes are data-dependent); this
+    returns the raw flattened leaves keyed by the ``SEP``-joined paths
+    ``save`` wrote, leaving structure to the caller.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -91,7 +103,7 @@ def restore(ckpt_dir: str, template, step: Optional[int] = None):
         manifest = json.load(f)
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
-    return _unflatten_into(template, arrays), step, manifest.get("extra", {})
+    return arrays, step, manifest.get("extra", {})
 
 
 def prune(ckpt_dir: str, keep: int = 3):

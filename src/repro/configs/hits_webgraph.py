@@ -15,6 +15,12 @@ class RankingConfig:
     # sweep backend for the batched column sweep (see serve.backends)
     serve_backend: str = "auto"   # dense | sharded | bsr | auto
     serve_shard_mode: str = "dual_blocked"  # replicated | dual_blocked
+    # async micro-batching frontend (serve.queue.RankQueue)
+    serve_deadline_ms: float = 5.0  # max extra batching latency per request
+    serve_queue_depth: int = 0      # distinct pending bound (0: 4*v_max)
+    # restart-survivable cache spill (serve.spill.CacheSpill)
+    serve_spill_dir: str = ""       # "": in-process cache only
+    serve_spill_policy: str = "all"  # all | evict
 
 
 CONFIG = RankingConfig()

@@ -3,10 +3,16 @@ with a request-generator load loop.
 
 Simulates the serving workload the ROADMAP names: a stream of root-set
 queries with Zipf-skewed popularity (popular queries repeat — the cache's
-bread and butter), batched V at a time through one traversal.
+bread and butter), batched V at a time through one traversal. `--frontend
+queued` feeds the stream one request at a time through the async
+micro-batching `RankQueue` (Poisson arrivals via `--arrival-qps`;
+p50/p95 latency reported), and `--spill-dir` persists converged vectors
+so a relaunch serves the previous run's queries warm.
 
   PYTHONPATH=src python -m repro.launch.serve_rank --dataset wikipedia \
       --scale 0.5 --requests 200 --v 8
+  PYTHONPATH=src python -m repro.launch.serve_rank --frontend queued \
+      --arrival-qps 100 --deadline-ms 5 --spill-dir /tmp/rank_spill
 """
 from __future__ import annotations
 
@@ -60,6 +66,22 @@ def main():
                     help="sharded backend edge-shard strategy")
     ap.add_argument("--shard-devices", type=int, default=None,
                     help="sharded backend device count (default: all)")
+    ap.add_argument("--frontend", default="sync",
+                    choices=["sync", "queued"],
+                    help="sync: pre-built v_max chunks; queued: async "
+                         "micro-batching RankQueue fed one request at a time")
+    ap.add_argument("--arrival-qps", type=float, default=0.0,
+                    help="queued: Poisson arrival rate (0: back-to-back)")
+    ap.add_argument("--deadline-ms", type=float,
+                    default=CONFIG.serve_deadline_ms,
+                    help="queued: max extra batching latency per request")
+    ap.add_argument("--queue-depth", type=int,
+                    default=CONFIG.serve_queue_depth or None,
+                    help="queued: max distinct pending root sets")
+    ap.add_argument("--spill-dir", default=CONFIG.serve_spill_dir or None,
+                    help="cache spill directory (restart-survivable cache)")
+    ap.add_argument("--spill-policy", default=CONFIG.serve_spill_policy,
+                    choices=["all", "evict"])
     args = ap.parse_args()
 
     from ..graph import WebGraphSpec, generate_webgraph, paper_dataset
@@ -73,23 +95,52 @@ def main():
     print(f"graph: N={g.n_nodes} E={g.n_edges} "
           f"dangling={g.dangling_fraction():.1%}")
 
-    def cfg():
+    def cfg(spill=args.spill_dir):
         return RankServiceConfig(v_max=args.v, tol=args.tol,
                                  backend=args.backend,
                                  shard_mode=args.shard_mode,
-                                 shard_devices=args.shard_devices)
+                                 shard_devices=args.shard_devices,
+                                 deadline_ms=args.deadline_ms,
+                                 queue_depth=args.queue_depth,
+                                 spill_dir=spill,
+                                 spill_policy=args.spill_policy)
 
     svc = RankService(g, cfg())
+    if args.spill_dir and svc.stats["spill_restored"]:
+        print(f"spill: restored {svc.stats['spill_restored']} cache entries "
+              f"from {args.spill_dir}")
     rng = np.random.default_rng(args.seed)
     stream = zipf_query_stream(rng, g.n_nodes, args.requests, args.roots,
                                vocab=args.vocab)
 
     # warm the compile caches so the loop measures serving, not tracing
     # (on a fresh service so the measured run's cache starts cold)
-    RankService(g, cfg()).rank(stream[: args.v])
-    t0 = time.time()
-    results = svc.rank(stream)
-    dt = time.time() - t0
+    RankService(g, cfg(spill=None)).rank(stream[: args.v])
+    lat = None
+    if args.frontend == "queued":
+        # one request at a time through the micro-batching queue, Poisson
+        # inter-arrivals — the live-traffic regime the sync path can't see
+        gaps = (rng.exponential(1.0 / args.arrival_qps, len(stream))
+                if args.arrival_qps > 0 else np.zeros(len(stream)))
+        t0 = time.time()
+        with svc.queue() as q:
+            tickets = []
+            for roots, gap in zip(stream, gaps):
+                if gap:
+                    time.sleep(gap)
+                tickets.append(q.submit(roots))
+            results = [t.result(timeout=600) for t in tickets]
+        dt = time.time() - t0
+        lat = np.array([t.latency_s for t in tickets]) * 1e3
+        qs = q.stats
+        print(f"queue: {qs['batches']} batches "
+              f"(vmax {qs['flush_vmax']} / deadline {qs['flush_deadline']} "
+              f"/ drain {qs['flush_drain']}), {qs['coalesced']} coalesced, "
+              f"max width {qs['max_batch']}")
+    else:
+        t0 = time.time()
+        results = svc.rank(stream)
+        dt = time.time() - t0
 
     s = svc.stats
     iters = [r.iters for r in results if r.iters > 0]
@@ -98,6 +149,12 @@ def main():
           f"backend {args.backend}: {s['backend_batches']})")
     print(f"cache: {s['hit']} hits / {s['warm']} warm / {s['cold']} cold "
           f"({s['hit'] / max(s['queries'], 1):.1%} hit rate)")
+    if lat is not None:
+        print(f"latency: p50 {np.percentile(lat, 50):.1f}ms "
+              f"p95 {np.percentile(lat, 95):.1f}ms max {lat.max():.1f}ms")
+    if args.spill_dir:
+        print(f"spill: {s['spill_writes']} writes / {s['spill_hits']} disk "
+              f"hits -> {args.spill_dir} (restart me to serve them warm)")
     if iters:
         print(f"iterated queries: mean {np.mean(iters):.1f} sweeps, "
               f"max {max(iters)}")

@@ -3,12 +3,15 @@ from .backends import (BACKENDS, BsrSweepBackend, DenseSweepBackend,
                        make_backend, select_backend)
 from .kvquant import (dequantize_kv, init_quant_cache, quant_decode_attention,
                       quantize_kv, update_quant_cache)
+from .queue import QueueTicket, RankQueue
 from .rank_service import (QueryResult, RankService, RankServiceConfig)
+from .spill import CacheSpill
 
 __all__ = [
     "dequantize_kv", "init_quant_cache", "quant_decode_attention",
     "quantize_kv", "update_quant_cache",
     "QueryResult", "RankService", "RankServiceConfig",
+    "RankQueue", "QueueTicket", "CacheSpill",
     "BACKENDS", "SweepBackend", "SweepBatch", "DenseSweepBackend",
     "ShardedSweepBackend", "BsrSweepBackend", "make_backend",
     "select_backend",

@@ -1,0 +1,222 @@
+"""Async micro-batching frontend for the query-ranking service.
+
+``RankService.rank`` is synchronous: a caller hands it a ready-made list
+and the traversal runs at whatever width that list happens to have. Under
+live traffic queries arrive one at a time, so without a queue every
+request would run as a V=1 sweep and the batched-column win (one edge
+traversal serving ``v_max`` users) evaporates. ``RankQueue`` closes that
+gap: callers ``submit`` individual root sets and get a ticket back;
+submissions accumulate until either ``v_max`` distinct root sets are
+pending or the oldest has waited ``deadline_ms`` — whichever comes first —
+then one batched sweep dispatches through the service's configured
+``SweepBackend`` and every waiting ticket resolves.
+
+Duplicate root sets in flight coalesce into one pending column (the ticket
+fan-out mirrors ``RankService``'s in-batch dedup, but at queue level the
+duplicates never consume queue depth or batch columns), and a bounded
+pending set gives natural backpressure: ``submit`` blocks once
+``max_pending`` distinct root sets are waiting.
+
+All device work runs on the single dispatcher thread (or the caller's
+thread inside ``flush``/``close`` drains, serialized by the dispatch
+lock), so backends never see concurrent sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..graph.subgraph import root_set_key
+
+
+class QueueTicket:
+    """A pending query's handle: blocks on ``result()`` until its batch
+    dispatches (or the queue rejects it)."""
+
+    def __init__(self, key: str):
+        self.key = key
+        self.submitted_at = time.perf_counter()
+        self._done = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self.latency_s: Optional[float] = None  # submit -> resolve
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """The query's ``QueryResult`` (raises what the dispatch raised)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"query {self.key[:12]} still pending")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def _resolve(self, result, exc: Optional[BaseException] = None):
+        self._result, self._exc = result, exc
+        self.latency_s = time.perf_counter() - self.submitted_at
+        self._done.set()
+
+
+@dataclasses.dataclass
+class _Pending:
+    roots: np.ndarray
+    tickets: List[QueueTicket]
+    submitted_at: float
+
+
+class RankQueue:
+    """Deadline/width micro-batching queue in front of one ``RankService``.
+
+    ``deadline_ms`` bounds the extra latency batching may add to any
+    request; ``max_pending`` bounds how many distinct root sets may wait
+    (further ``submit`` calls block — backpressure, not unbounded memory).
+    """
+
+    def __init__(self, service, deadline_ms: float = 5.0,
+                 max_pending: Optional[int] = None):
+        self.service = service
+        self.v_max = service.cfg.v_max
+        self.deadline_s = float(deadline_ms) / 1e3
+        self.max_pending = (4 * self.v_max if max_pending is None
+                            else int(max_pending))
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self._cond = threading.Condition()
+        self._pending: "OrderedDict[str, _Pending]" = OrderedDict()
+        self._dispatch_lock = threading.Lock()  # serializes service.rank
+        self._closed = False
+        self.stats = {"submitted": 0, "coalesced": 0, "batches": 0,
+                      "flush_vmax": 0, "flush_deadline": 0, "flush_drain": 0,
+                      "max_batch": 0}
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="rank-queue-dispatch")
+        self._thread.start()
+
+    # -- client side ------------------------------------------------------
+
+    def submit(self, roots: Sequence[int]) -> QueueTicket:
+        """Enqueue one root set; returns immediately with a ticket.
+
+        Invalid root sets raise here, in the caller's thread, so one bad
+        request can never poison a batch of good ones at dispatch time.
+        """
+        roots_u = self.service.validate_roots(roots)
+        key = root_set_key(roots_u)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            self.stats["submitted"] += 1
+            t = self._coalesce(key)
+            if t is not None:  # one column serves all tickets for the key
+                return t
+            while len(self._pending) >= self.max_pending and not self._closed:
+                self._cond.wait(0.05)
+                # the wait releases the lock: another thread may have queued
+                # this same key meanwhile — inserting a second _Pending
+                # would orphan that thread's tickets, so re-check
+                t = self._coalesce(key)
+                if t is not None:
+                    return t
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            t = QueueTicket(key)
+            self._pending[key] = _Pending(roots_u, [t], time.perf_counter())
+            self._cond.notify_all()
+            return t
+
+    def _coalesce(self, key: str) -> Optional[QueueTicket]:
+        """Under the lock: attach a ticket to ``key``'s pending column if
+        one exists."""
+        p = self._pending.get(key)
+        if p is None:
+            return None
+        t = QueueTicket(key)
+        p.tickets.append(t)
+        self.stats["coalesced"] += 1
+        return t
+
+    def rank_async(self, queries: Sequence[Sequence[int]]) -> List[QueueTicket]:
+        return [self.submit(q) for q in queries]
+
+    def flush(self):
+        """Dispatch everything pending now (caller's thread), ignoring the
+        deadline — the drain a benchmark or shutdown wants."""
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                return
+            self.stats["flush_drain"] += 1
+            self._dispatch(batch)
+
+    def close(self, wait: bool = True):
+        """Stop accepting submissions, drain what's pending, stop the
+        dispatcher."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if wait:
+            self._thread.join()
+            self.flush()  # anything the dispatcher left behind
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    @property
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    # -- dispatcher -------------------------------------------------------
+
+    def _take_batch(self) -> List[_Pending]:
+        with self._cond:
+            batch = []
+            while self._pending and len(batch) < self.v_max:
+                _key, p = self._pending.popitem(last=False)  # FIFO
+                batch.append(p)
+            if batch:
+                self._cond.notify_all()  # wake backpressured submitters
+            return batch
+
+    def _dispatch(self, batch: List[_Pending]):
+        self.stats["batches"] += 1
+        self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
+        with self._dispatch_lock:
+            try:
+                results = self.service.rank([p.roots for p in batch])
+                err = None
+            except BaseException as e:  # noqa: BLE001 — forwarded to tickets
+                results, err = [None] * len(batch), e
+        for p, r in zip(batch, results):
+            for t in p.tickets:
+                t._resolve(r, err)
+
+    def _loop(self):
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if self._closed and not self._pending:
+                    return
+                n = len(self._pending)
+                oldest = next(iter(self._pending.values())).submitted_at
+                wait_s = oldest + self.deadline_s - time.perf_counter()
+                if n < self.v_max and wait_s > 0 and not self._closed:
+                    self._cond.wait(wait_s)
+                    continue  # re-evaluate: more arrivals or deadline hit
+                reason = ("flush_vmax" if n >= self.v_max
+                          else "flush_deadline")
+            batch = self._take_batch()
+            if batch:
+                self.stats[reason] += 1
+                self._dispatch(batch)

@@ -56,6 +56,12 @@ class RankServiceConfig:
     shard_devices: Optional[int] = None  # sharded: device count (None: all)
     bsr_block: int = 128       # bsr: block size (MXU-aligned on TPU)
     interpret: Optional[bool] = None   # bsr: Pallas interpret override
+    # async micro-batching frontend (serve.queue.RankQueue / .queue()):
+    deadline_ms: float = 5.0   # max extra latency batching may add
+    queue_depth: Optional[int] = None  # max distinct pending (None: 4*v_max)
+    # restart-survivable cache spill (serve.spill.CacheSpill):
+    spill_dir: Optional[str] = None    # None: in-process cache only
+    spill_policy: str = "all"  # all: every converged entry | evict: LRU only
 
 
 @dataclasses.dataclass
@@ -106,6 +112,8 @@ class RankService:
             self.cfg = dataclasses.replace(self.cfg, tol=min_tol)
         if self.cfg.backend not in ("dense", "sharded", "bsr", "auto"):
             raise ValueError(f"unknown backend {self.cfg.backend!r}")
+        if self.cfg.spill_policy not in ("all", "evict"):
+            raise ValueError(f"unknown spill policy {self.cfg.spill_policy!r}")
         self.extractor = SubgraphExtractor(g, self.cfg.out_cap,
                                            self.cfg.in_cap)
         self._backends: Dict[str, SweepBackend] = {}
@@ -114,7 +122,22 @@ class RankService:
         self._warm_h = np.zeros(g.n_nodes)
         self._warm_seen = np.zeros(g.n_nodes, bool)
         self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
-                      "cold": 0, "sweeps": 0, "backend_batches": {}}
+                      "cold": 0, "sweeps": 0, "backend_batches": {},
+                      "spill_writes": 0, "spill_hits": 0, "spill_restored": 0}
+        self._spill = None
+        if self.cfg.spill_dir is not None:
+            from .spill import CacheSpill
+            self._spill = CacheSpill(self.cfg.spill_dir)
+            self._restore_spilled()
+
+    def queue(self, **kw):
+        """An async micro-batching frontend over this service (the config's
+        ``deadline_ms``/``queue_depth`` unless overridden)."""
+        from .queue import RankQueue
+        kw.setdefault("deadline_ms", self.cfg.deadline_ms)
+        # 0 and None both mean "the 4*v_max default" (configs use 0)
+        kw.setdefault("max_pending", self.cfg.queue_depth or None)
+        return RankQueue(self, **kw)
 
     # -- backends ---------------------------------------------------------
 
@@ -146,15 +169,86 @@ class RankService:
         e = self._cache.get(key)
         if e is not None:
             self._cache.move_to_end(key)
-        return e
+            return e
+        if self._spill is not None:  # fall back to spilled (evicted/restart)
+            e = self._entry_from_spill(self._spill.get(key))
+            if e is not None:
+                self.stats["spill_hits"] += 1
+                self._admit(key, e)  # back in the LRU, no rewrite to disk
+                self._warm_h[e.nodes] = e.hub
+                self._warm_seen[e.nodes] = True
+                return e
+        return None
 
-    def _cache_put(self, key: str, e: _CacheEntry):
+    def _entry_from_spill(self, d) -> Optional[_CacheEntry]:
+        """Validate a spilled record (a spill dir pointed at the wrong
+        graph must not crash node indexing) -> entry or None."""
+        if d is None:
+            return None
+        nodes = d["nodes"]
+        if len(nodes) == 0 or len(d["authority"]) != len(nodes) \
+                or len(d["hub"]) != len(nodes) \
+                or int(nodes[-1]) >= self.g.n_nodes or int(nodes[0]) < 0:
+            return None
+        return _CacheEntry(nodes=nodes, authority=d["authority"],
+                           hub=d["hub"])
+
+    def _admit(self, key: str, e: _CacheEntry):
+        """LRU insert + eviction (spilling evictees keeps them servable)."""
         self._cache[key] = e
         self._cache.move_to_end(key)
         while len(self._cache) > self.cfg.cache_size:
-            self._cache.popitem(last=False)
+            old_key, old = self._cache.popitem(last=False)
+            # under "all" every converged entry was spilled at _cache_put
+            if self._spill is not None and self.cfg.spill_policy == "evict":
+                self._spill.put(old_key, old.nodes, old.authority, old.hub)
+                self.stats["spill_writes"] += 1
+
+    def _cache_put(self, key: str, e: _CacheEntry):
+        if self._spill is not None and self.cfg.spill_policy == "all":
+            self._spill.put(key, e.nodes, e.authority, e.hub)
+            self.stats["spill_writes"] += 1
+        self._admit(key, e)
+
+    def _restore_spilled(self):
+        """Repopulate the LRU (newest-spilled most recent) and the global
+        warm table from a previous process's spill directory."""
+        restored = list(self._spill.load_recent(limit=self.cfg.cache_size))
+        n = 0
+        for key, d in reversed(restored):  # oldest first -> newest ends MRU
+            e = self._entry_from_spill(d)
+            if e is None:
+                continue
+            self._admit(key, e)
+            self._warm_h[e.nodes] = e.hub
+            self._warm_seen[e.nodes] = True
+            n += 1
+        self.stats["spill_restored"] = n
+
+    def flush_spill(self):
+        """Force-spill every in-memory entry (a graceful-shutdown drain for
+        ``spill_policy="evict"``; under ``"all"`` everything is already on
+        disk)."""
+        if self._spill is None:
+            raise ValueError("no spill_dir configured")
+        for key, e in self._cache.items():
+            self._spill.put(key, e.nodes, e.authority, e.hub)
+            self.stats["spill_writes"] += 1
 
     # -- serving ----------------------------------------------------------
+
+    def validate_roots(self, roots: Sequence[int]) -> np.ndarray:
+        """Deduped, sorted, range-checked root set (the canonical form every
+        entry point — sync ``rank`` and the async queue — validates to)."""
+        roots_u = np.unique(np.asarray(roots, np.int64)).astype(np.int32)
+        if len(roots_u) == 0:
+            raise ValueError("empty root set")
+        if roots_u[0] < 0 or roots_u[-1] >= self.g.n_nodes:
+            # negative ids would silently wrap through numpy indexing
+            raise ValueError(
+                f"root ids must be in [0, {self.g.n_nodes}); got "
+                f"[{roots_u[0]}, {roots_u[-1]}]")
+        return roots_u
 
     def rank(self, queries: Sequence[Sequence[int]], *,
              refresh: bool = False) -> List[QueryResult]:
@@ -163,17 +257,7 @@ class RankService:
         instead of serving the stored scores."""
         # validate everything before serving anything: a mid-batch raise
         # would lose computed results and corrupt the stats counters
-        clean = []
-        for roots in queries:
-            roots_u = np.unique(np.asarray(roots, np.int64)).astype(np.int32)
-            if len(roots_u) == 0:
-                raise ValueError("empty root set")
-            if roots_u[0] < 0 or roots_u[-1] >= self.g.n_nodes:
-                # negative ids would silently wrap through numpy indexing
-                raise ValueError(
-                    f"root ids must be in [0, {self.g.n_nodes}); got "
-                    f"[{roots_u[0]}, {roots_u[-1]}]")
-            clean.append(roots_u)
+        clean = [self.validate_roots(roots) for roots in queries]
         out: List[QueryResult] = []
         v = self.cfg.v_max
         for i in range(0, len(clean), v):

@@ -1,0 +1,105 @@
+"""Restart-survivable cache spill for the query-ranking service.
+
+``RankService``'s LRU holds converged authority/hub vectors per root-set
+hash — exactly the state that is expensive to lose: Peserico & Pretto-style
+adversarial graphs can take many sweeps to converge, so a restart that
+drops the cache turns every popular query cold again. This module spills
+entries through ``checkpoint.checkpoint`` (atomic manifest + os.replace
+semantics, one checkpoint directory per root-set hash) so a fresh process
+pointed at the same directory serves repeats from disk and warm-starts
+overlaps from the restored score table.
+
+Layout: ``<spill_dir>/<root-set-hash>/step_<gen>/{arrays.npz,manifest.json}``
+— each cache entry is its own tiny checkpoint stream; refreshes bump the
+generation and prune the old one, and a crash mid-write never corrupts the
+previously-spilled generation (the checkpoint module's invariant).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .. import checkpoint
+
+# spill entries are flat {name: array} trees; checkpoint flattens dict
+# keys as "k=<name>"
+_FIELDS = ("nodes", "authority", "hub")
+
+
+def _is_key(name: str) -> bool:
+    return len(name) == 40 and all(c in "0123456789abcdef" for c in name)
+
+
+class CacheSpill:
+    """Per-root-set-hash persistence of converged cache entries."""
+
+    def __init__(self, spill_dir: str):
+        self.dir = spill_dir
+        os.makedirs(spill_dir, exist_ok=True)
+
+    def put(self, key: str, nodes: np.ndarray, authority: np.ndarray,
+            hub: np.ndarray) -> str:
+        entry_dir = os.path.join(self.dir, key)
+        gen = (checkpoint.latest_step(entry_dir) or 0) + 1
+        tree = {"nodes": np.asarray(nodes), "authority": np.asarray(authority),
+                "hub": np.asarray(hub)}
+        path = checkpoint.save(entry_dir, gen, tree,
+                               extra={"key": key, "n_nodes": len(nodes)})
+        checkpoint.prune(entry_dir, keep=1)
+        return path
+
+    def get(self, key: str) -> Optional[Dict[str, np.ndarray]]:
+        """{"nodes", "authority", "hub"} or None if absent/unreadable."""
+        entry_dir = os.path.join(self.dir, key)
+        try:
+            arrays, _step, _extra = checkpoint.restore_arrays(entry_dir)
+        except (FileNotFoundError, OSError, KeyError, ValueError):
+            return None
+        try:
+            return {f: arrays[f"k={f}"] for f in _FIELDS}
+        except KeyError:
+            return None  # foreign/corrupt checkpoint in the spill dir
+
+    def keys(self) -> List[str]:
+        if not os.path.isdir(self.dir):
+            return []
+        return [n for n in os.listdir(self.dir)
+                if _is_key(n) and checkpoint.latest_step(
+                    os.path.join(self.dir, n)) is not None]
+
+    def __contains__(self, key: str) -> bool:
+        return checkpoint.latest_step(os.path.join(self.dir, key)) is not None
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def load_recent(self, limit: Optional[int] = None
+                    ) -> Iterable[Tuple[str, Dict[str, np.ndarray]]]:
+        """Yield (key, entry) newest-spilled-first, up to ``limit``.
+
+        Recency comes from the checkpoint manifests' write times, so a
+        restarted service repopulates its LRU with the entries most
+        recently converged before the restart — the ones traffic was
+        actually hitting.
+        """
+        import json
+        stamped = []
+        for key in self.keys():
+            entry_dir = os.path.join(self.dir, key)
+            step = checkpoint.latest_step(entry_dir)
+            try:
+                with open(os.path.join(entry_dir, f"step_{step:010d}",
+                                       "manifest.json")) as f:
+                    t = json.load(f).get("time", 0.0)
+            except (OSError, ValueError):
+                continue
+            stamped.append((t, key))
+        stamped.sort(reverse=True)
+        if limit is not None:
+            stamped = stamped[:limit]
+        for _t, key in stamped:
+            e = self.get(key)
+            if e is not None:
+                yield key, e

@@ -1,0 +1,197 @@
+"""Async micro-batching frontend semantics (serve.queue.RankQueue):
+v_max-width flush vs deadline flush, duplicate-root-set coalescing,
+backpressure/closure, and queued-vs-sync parity on every sweep backend
+(the frontend must batch requests without changing the math)."""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import WebGraphSpec, generate_webgraph, root_set_key
+from repro.serve import RankService, RankServiceConfig
+
+TOL = 1e-12
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generate_webgraph(WebGraphSpec(1200, 9000, 0.5, seed=4))
+
+
+@pytest.fixture(scope="module")
+def queries(g):
+    rng = np.random.default_rng(6)
+    return [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(8)]
+
+
+def svc_for(g, **kw):
+    kw.setdefault("v_max", 4)
+    kw.setdefault("tol", TOL)
+    return RankService(g, RankServiceConfig(**kw))
+
+
+# ------------------------------------------------------------ flush rules
+
+
+def test_vmax_flush_does_not_wait_for_deadline(g, queries):
+    """v_max distinct pending root sets dispatch immediately — a full batch
+    never sits out a (deliberately huge) deadline."""
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=60_000) as q:
+        t0 = time.perf_counter()
+        tickets = [q.submit(qq) for qq in queries[:4]]  # == v_max
+        results = [t.result(timeout=120) for t in tickets]
+        elapsed = time.perf_counter() - t0
+    assert elapsed < 30  # flushed by width, not the 60s deadline
+    assert q.stats["flush_vmax"] == 1
+    assert q.stats["flush_deadline"] == 0
+    assert q.stats["max_batch"] == 4
+    assert [r.status for r in results] == ["cold"] * 4
+
+
+def test_deadline_flush_dispatches_partial_batch(g, queries):
+    """Fewer than v_max pending root sets still dispatch once the oldest
+    has waited deadline_ms."""
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=30) as q:
+        tickets = [q.submit(qq) for qq in queries[:2]]  # < v_max
+        results = [t.result(timeout=120) for t in tickets]
+    assert q.stats["flush_deadline"] == 1
+    assert q.stats["flush_vmax"] == 0
+    assert [r.status for r in results] == ["cold"] * 2
+    # every ticket waited at least (roughly) the deadline for its batch
+    assert all(t.latency_s >= 0.02 for t in tickets)
+
+
+def test_close_drains_pending(g, queries):
+    """close() dispatches what's queued instead of abandoning tickets."""
+    svc = svc_for(g)
+    q = svc.queue(deadline_ms=60_000)
+    tickets = [q.submit(qq) for qq in queries[:2]]
+    q.close()
+    assert all(t.done() for t in tickets)
+    assert all(t.result().status == "cold" for t in tickets)
+    with pytest.raises(RuntimeError):
+        q.submit(queries[0])
+
+
+# ------------------------------------------------------------- coalescing
+
+
+def test_duplicate_root_sets_coalesce_in_flight(g, queries):
+    """The same root set submitted while pending (any order/multiplicity)
+    occupies ONE column and every ticket gets the same result."""
+    svc = svc_for(g)
+    roots = list(queries[0])
+    with svc.queue(deadline_ms=60_000) as q:
+        t1 = q.submit(roots)
+        t2 = q.submit(list(reversed(roots)))
+        t3 = q.submit(roots + [int(roots[0])])  # dup ids, same set
+        assert q.depth == 1  # one pending column for all three
+        # distinct sets fill the rest of the batch and trigger the flush
+        rest = [q.submit(qq) for qq in queries[1:4]]
+        results = [t.result(timeout=120) for t in (t1, t2, t3)]
+        _ = [t.result(timeout=120) for t in rest]
+    assert results[0] is results[1] is results[2]
+    assert q.stats["coalesced"] == 2
+    assert q.stats["submitted"] == 6
+    assert q.stats["flush_vmax"] == 1  # 4 distinct sets == v_max
+    assert svc.stats["queries"] == 4  # the service never saw the dups
+
+
+def test_coalesced_key_matches_root_set_key(g, queries):
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=20) as q:
+        t = q.submit(queries[0])
+        assert t.key == root_set_key(queries[0])
+        t.result(timeout=120)
+
+
+# ------------------------------------------------- validation/backpressure
+
+
+def test_invalid_roots_raise_at_submit_not_dispatch(g, queries):
+    """A bad root set fails in the caller's thread; queued good requests
+    still serve."""
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=30) as q:
+        good = q.submit(queries[0])
+        for bad in ([], [-1], [g.n_nodes]):
+            with pytest.raises(ValueError):
+                q.submit(bad)
+        assert good.result(timeout=120).status == "cold"
+    assert q.stats["submitted"] == 1  # rejects never counted as submitted
+
+
+def test_backpressure_bounds_distinct_pending(g):
+    """submit blocks once max_pending distinct root sets wait; coalescing
+    duplicates does NOT consume depth."""
+    svc = svc_for(g, v_max=2)
+    rng = np.random.default_rng(9)
+    qs = [rng.choice(g.n_nodes, size=3, replace=False) for _ in range(8)]
+    with svc.queue(deadline_ms=5, max_pending=2) as q:
+        tickets = [q.submit(x) for x in qs]  # blocks transiently, never dies
+        assert all(t.result(timeout=120) is not None for t in tickets)
+    assert q.stats["max_batch"] <= 2
+    with pytest.raises(ValueError):
+        svc.queue(max_pending=0)
+
+
+# -------------------------------------------------- queued == sync parity
+
+
+def test_queued_matches_sync_dense_in_process(g, queries):
+    """Same stream through the queue and through sync rank(): identical
+    node sets, scores <= 1e-10 L1 apart (dense backend, in process)."""
+    ref = svc_for(g).rank(queries)
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=10) as q:
+        res = [t.result(timeout=300) for t in q.rank_async(queries)]
+    for a, b in zip(ref, res):
+        assert (a.nodes == b.nodes).all()
+        assert np.abs(a.authority - b.authority).sum() <= 1e-10
+        assert np.abs(a.hub - b.hub).sum() <= 1e-10
+
+
+PARITY_ALL_BACKENDS = r"""
+import numpy as np, jax
+jax.config.update("jax_enable_x64", True)
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.serve import RankService, RankServiceConfig
+
+TOL = 1e-12
+g = generate_webgraph(WebGraphSpec(260, 2000, 0.5, seed=2))
+rng = np.random.default_rng(0)
+queries = [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(6)]
+
+ref = RankService(g, RankServiceConfig(v_max=4, tol=TOL)).rank(queries)
+for kw in ({"backend": "dense"},
+           {"backend": "sharded", "shard_devices": 2},
+           {"backend": "bsr"}):
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL, **kw))
+    with svc.queue(deadline_ms=10) as q:
+        res = [t.result(timeout=600) for t in q.rank_async(queries)]
+    for a, b in zip(ref, res):
+        assert (a.nodes == b.nodes).all(), kw
+        assert np.abs(a.authority - b.authority).sum() <= 1e-10, kw
+        assert np.abs(a.hub - b.hub).sum() <= 1e-10, kw
+    assert set(svc.stats["backend_batches"]) == {kw["backend"]}, kw
+    print("QUEUE PARITY", kw["backend"], "OK")
+"""
+
+
+def test_queued_matches_sync_every_backend():
+    """ISSUE 3 acceptance: queued dispatch == synchronous path <= 1e-10 L1
+    on dense, sharded (2 host devices), and bsr."""
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", PARITY_ALL_BACKENDS],
+                       capture_output=True, text=True, env=env, cwd=ROOT,
+                       timeout=600)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    for b in ("dense", "sharded", "bsr"):
+        assert f"QUEUE PARITY {b} OK" in r.stdout

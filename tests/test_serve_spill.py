@@ -1,0 +1,246 @@
+"""Restart-survivable cache spill (serve.spill.CacheSpill + RankService
+spill_dir): checkpoint round-trips of cache entries, LRU-eviction spill,
+disk fallback on cache miss, robustness to foreign spill state, and the
+cross-process restart criterion (spill in process A -> fresh process B
+serves repeats as hits and overlaps warm) on every sweep backend."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_arrays
+from repro.graph import WebGraphSpec, generate_webgraph, root_set_key
+from repro.serve import CacheSpill, RankService, RankServiceConfig
+
+TOL = 1e-12
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generate_webgraph(WebGraphSpec(1500, 12000, 0.5, seed=8))
+
+
+@pytest.fixture(scope="module")
+def queries(g):
+    rng = np.random.default_rng(2)
+    return [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(6)]
+
+
+def svc_for(g, spill_dir, **kw):
+    kw.setdefault("v_max", 4)
+    kw.setdefault("tol", TOL)
+    return RankService(g, RankServiceConfig(spill_dir=str(spill_dir), **kw))
+
+
+# ------------------------------------------------------- CacheSpill store
+
+
+def test_spill_round_trip_exact(tmp_path):
+    """put -> get returns bit-identical arrays through the checkpoint
+    layer's flatten/npz path (no dtype or shape drift)."""
+    sp = CacheSpill(str(tmp_path))
+    key = root_set_key([5, 2, 9])
+    nodes = np.array([2, 5, 9, 77], np.int32)
+    auth = np.array([0.5, 0.25, 0.25, 0.0])
+    hub = np.array([0.1, 0.2, 0.3, 0.4])
+    sp.put(key, nodes, auth, hub)
+    e = sp.get(key)
+    assert np.array_equal(e["nodes"], nodes) and e["nodes"].dtype == nodes.dtype
+    assert np.array_equal(e["authority"], auth)
+    assert np.array_equal(e["hub"], hub)
+    assert key in sp and sp.keys() == [key] and len(sp) == 1
+    assert sp.get("0" * 40) is None
+
+    # re-put bumps the generation and prunes the old one (atomic refresh)
+    sp.put(key, nodes, auth * 2, hub)
+    assert latest_step(os.path.join(str(tmp_path), key)) == 2
+    assert np.array_equal(sp.get(key)["authority"], auth * 2)
+    # the underlying checkpoint is a normal one (template-free readable)
+    arrays, step, extra = restore_arrays(os.path.join(str(tmp_path), key))
+    assert step == 2 and extra["key"] == key
+    assert np.array_equal(arrays["k=nodes"], nodes)
+
+
+def test_load_recent_orders_newest_first_and_limits(tmp_path):
+    sp = CacheSpill(str(tmp_path))
+    keys = [root_set_key([i]) for i in range(5)]
+    for i, k in enumerate(keys):
+        sp.put(k, np.array([i], np.int32), np.ones(1), np.ones(1))
+        # manifests are stamped with time.time(); force distinct stamps
+        mdir = os.path.join(str(tmp_path), k, f"step_{1:010d}")
+        with open(os.path.join(mdir, "manifest.json")) as f:
+            m = json.load(f)
+        m["time"] = float(i)
+        with open(os.path.join(mdir, "manifest.json"), "w") as f:
+            json.dump(m, f)
+    got = list(sp.load_recent(limit=3))
+    assert [k for k, _ in got] == keys[::-1][:3]
+
+
+def test_foreign_junk_in_spill_dir_is_ignored(tmp_path, g):
+    """Stray files, non-key dirs, and corrupt entries must not break
+    startup restore or miss-path lookups."""
+    (tmp_path / "README.txt").write_text("not a cache entry")
+    (tmp_path / "not-a-hash").mkdir()
+    bad = root_set_key([1])
+    (tmp_path / bad / "step_0000000001").mkdir(parents=True)
+    (tmp_path / bad / "step_0000000001" / "manifest.json").write_text("{}")
+    svc = svc_for(g, tmp_path)
+    assert svc.stats["spill_restored"] == 0
+    assert svc.rank([[1, 2, 3]])[0].status == "cold"
+
+
+def test_entries_from_wrong_graph_rejected(tmp_path, g):
+    """A spill dir written against a bigger graph can't crash warm-table
+    indexing — out-of-range node ids are dropped at restore."""
+    sp = CacheSpill(str(tmp_path))
+    key = root_set_key([3])
+    sp.put(key, np.array([g.n_nodes + 5], np.int32), np.ones(1), np.ones(1))
+    svc = svc_for(g, tmp_path)
+    assert svc.stats["spill_restored"] == 0
+    assert svc._cache_get(key) is None  # miss-path fallback rejects too
+
+
+# ---------------------------------------------- RankService spill behavior
+
+
+def test_eviction_spills_and_disk_fallback_serves_hit(tmp_path, g, queries):
+    """policy="evict": LRU evictees land on disk; a later query for an
+    evicted root set is served from spill as a hit (score-identical), not
+    recomputed cold."""
+    svc = svc_for(g, tmp_path, cache_size=2, spill_policy="evict")
+    cold = svc.rank(queries[:3])
+    assert svc.stats["spill_writes"] == 1  # exactly the one evictee
+    assert len(svc._cache) == 2
+    r = svc.rank([queries[0]])[0]  # evicted from RAM, alive on disk
+    assert r.status == "hit" and r.iters == 0
+    assert svc.stats["spill_hits"] == 1
+    assert np.array_equal(r.authority, cold[0].authority)
+    assert np.array_equal(r.hub, cold[0].hub)
+
+
+def test_policy_all_spills_every_converged_entry(tmp_path, g, queries):
+    svc = svc_for(g, tmp_path, spill_policy="all")
+    svc.rank(queries)
+    assert svc.stats["spill_writes"] == len(queries)
+    assert len(CacheSpill(str(tmp_path))) == len(queries)
+
+
+def test_flush_spill_drains_ram_cache(tmp_path, g, queries):
+    svc = svc_for(g, tmp_path, spill_policy="evict")
+    svc.rank(queries[:3])
+    assert len(CacheSpill(str(tmp_path))) == 0  # nothing evicted yet
+    svc.flush_spill()
+    assert len(CacheSpill(str(tmp_path))) == 3
+    no_spill = RankService(g, RankServiceConfig(v_max=4, tol=TOL))
+    with pytest.raises(ValueError):
+        no_spill.flush_spill()
+
+
+def test_bad_spill_policy_rejected(tmp_path, g):
+    with pytest.raises(ValueError):
+        svc_for(g, tmp_path, spill_policy="sometimes")
+
+
+def test_restart_same_process_restores_cache_and_warm_table(tmp_path, g,
+                                                            queries):
+    """Fresh service instance on the spill dir: repeats are hits with the
+    exact spilled scores; an overlapping (never-served) root set
+    warm-starts from the restored score table."""
+    svc1 = svc_for(g, tmp_path)
+    cold = svc1.rank(queries)
+    del svc1
+
+    svc2 = svc_for(g, tmp_path)
+    assert svc2.stats["spill_restored"] == len(queries)
+    again = svc2.rank(queries)
+    for c, a in zip(cold, again):
+        assert a.status == "hit" and a.iters == 0
+        assert np.array_equal(a.authority, c.authority)
+    overlap = queries[0][:-1]  # new key, mostly-seen base set
+    r = svc2.rank([overlap])[0]
+    assert r.key != root_set_key(queries[0])
+    assert r.status == "warm"
+
+
+# ----------------------------------------- cross-process restart (ISSUE 3)
+
+
+_PHASE_A = r"""
+import numpy as np, jax
+jax.config.update("jax_enable_x64", True)
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.serve import RankService, RankServiceConfig
+
+SPILL, BACKENDS = {spill!r}, {backends!r}
+g = generate_webgraph(WebGraphSpec(260, 2000, 0.5, seed=2))
+rng = np.random.default_rng(0)
+queries = [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(4)]
+for kw in BACKENDS:
+    svc = RankService(g, RankServiceConfig(
+        v_max=4, tol=1e-12, spill_dir=SPILL + "/" + kw["backend"], **kw))
+    cold = svc.rank(queries)
+    assert all(r.status == "cold" for r in cold)
+    np.save(SPILL + "/" + kw["backend"] + "_iters.npy",
+            np.array([r.iters for r in cold]))
+    np.save(SPILL + "/" + kw["backend"] + "_auth0.npy", cold[0].authority)
+print("PHASE A OK")
+"""
+
+_PHASE_B = r"""
+import numpy as np, jax
+jax.config.update("jax_enable_x64", True)
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.serve import RankService, RankServiceConfig
+
+SPILL, BACKENDS = {spill!r}, {backends!r}
+g = generate_webgraph(WebGraphSpec(260, 2000, 0.5, seed=2))
+rng = np.random.default_rng(0)
+queries = [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(4)]
+for kw in BACKENDS:
+    name = kw["backend"]
+    cold_iters = np.load(SPILL + "/" + name + "_iters.npy")
+    auth0 = np.load(SPILL + "/" + name + "_auth0.npy")
+    svc = RankService(g, RankServiceConfig(
+        v_max=4, tol=1e-12, spill_dir=SPILL + "/" + name, **kw))
+    assert svc.stats["spill_restored"] == len(queries), name
+
+    # previously-converged root set: a cache hit, zero sweeps, exact scores
+    r = svc.rank([queries[0]])[0]
+    assert r.status == "hit" and r.iters == 0, (name, r.status)
+    assert np.array_equal(r.authority, auth0), name
+    assert svc.stats["hit"] >= 1, name
+
+    # refresh iterates but warm-starts: <= the pre-restart cold sweep count
+    w = svc.rank([queries[1]], refresh=True)[0]
+    assert w.status == "warm", (name, w.status)
+    assert w.iters <= cold_iters[1], (name, w.iters, cold_iters[1])
+
+    # overlapping new root set warm-starts off the restored score table
+    o = svc.rank([queries[2][:-1]])[0]
+    assert o.status == "warm", (name, o.status)
+    print("RESTART", name, "OK")
+print("PHASE B OK")
+"""
+
+
+def test_restart_across_processes_all_backends(tmp_path):
+    """ISSUE 3 acceptance: process A converges and spills; a separate
+    process B pointed at the spill dir serves the same root sets with >=1
+    cache hit and <= warm-start sweep counts — for dense, sharded (2 host
+    devices), and bsr."""
+    backends = [{"backend": "dense"},
+                {"backend": "sharded", "shard_devices": 2},
+                {"backend": "bsr"}]
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    for phase, want in ((_PHASE_A, "PHASE A OK"), (_PHASE_B, "PHASE B OK")):
+        code = phase.format(spill=str(tmp_path), backends=backends)
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, env=env, cwd=ROOT, timeout=600)
+        assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+        assert want in r.stdout
