@@ -11,7 +11,11 @@ must move no more wire bytes per sweep than replicated). ISSUE 3 adds the
 arrival axis: requests arriving at ``--rates`` q/s served one-at-a-time
 (sync, virtual-clock single-server model over measured per-call times) vs
 submitted through ``RankQueue`` (real dispatcher, real sleeps) — p50/p95
-latency and throughput per rate, plus a queued==sync parity check.
+latency and throughput per rate, plus a queued==sync parity check. ISSUE 4
+adds the plan-hit-rate axis: the same repeat stream served cold-plan vs
+warm-plan (vector cache cleared between passes, ``SweepPlan`` cache kept)
+per backend — the warm leg must hit the plan cache every batch, and on the
+layout-heavy backends (sharded, bsr) must be measurably faster.
 
 ``--smoke`` shrinks everything to a seconds-scale CI tripwire (tiny graph,
 few queries, perf gates skipped — correctness gates still enforced).
@@ -57,6 +61,39 @@ def measure_collective_ladder(svc, queries, v, n_devices=None, dtype_bytes=8):
                      "analytic": be.collective_bytes_per_sweep(
                          n_pad, v, dtype_bytes)}
     return n_pad, out
+
+
+def plan_axis(g, cfg, queries, backends):
+    """Cold-plan vs warm-plan per-batch latency per backend (ISSUE 4).
+
+    The same stream is served twice by ONE service: between passes the
+    converged-vector state is cleared (``clear_result_cache``) but cached
+    ``SweepPlan``s are kept, so both passes run identical device sweeps
+    (same cold starts, same iteration counts) and differ only in host-side
+    layout work — edge shards, BSR blocking/permutation, device edge
+    transfer. The repeat-traffic leg must hit the plan cache on every
+    batch; the latency delta is the plan cache's whole value proposition.
+
+    Returns [(backend, us/batch cold, us/batch warm, hits, misses)].
+    """
+    rows = []
+    for kind in backends:
+        RankService(g, cfg(backend=kind)).rank(queries)  # compile warmup
+        svc = RankService(g, cfg(backend=kind))
+        t0 = time.perf_counter()
+        svc.rank(queries)
+        t_cold = time.perf_counter() - t0
+        n_batches = svc.stats["batches"]
+        hits_cold = svc.stats["plan_hits"]
+        svc.clear_result_cache()  # cold vectors, warm plans
+        t0 = time.perf_counter()
+        svc.rank(queries)
+        t_warm = time.perf_counter() - t0
+        hits = svc.stats["plan_hits"] - hits_cold
+        rows.append((kind, t_cold / n_batches * 1e6,
+                     t_warm / n_batches * 1e6, hits,
+                     svc.stats["plan_misses"]))
+    return rows
 
 
 def arrival_axis(g, cfg, queries, rates, deadline_ms):
@@ -171,8 +208,8 @@ def main():
     def cfg(**kw):
         kw.setdefault("v_max", args.v)
         kw.setdefault("tol", args.tol)
-        return RankServiceConfig(backend=args.backend,
-                                 shard_mode=args.shard_mode,
+        kw.setdefault("backend", args.backend)
+        return RankServiceConfig(shard_mode=args.shard_mode,
                                  shard_devices=args.shard_devices, **kw)
 
     svc = RankService(g, cfg())
@@ -249,6 +286,22 @@ def main():
               f"batches={qu['batches']} (vmax={qu['vmax']} "
               f"deadline={qu['deadline']})")
 
+    # --- plan-hit-rate axis: cold-plan vs warm-plan latency per backend
+    # (repeat traffic, cold vector cache — isolates the layout rebuild)
+    plan_rows = plan_axis(g, cfg, queries, ("dense", "sharded", "bsr"))
+    plan_hits_min, ok_plan_latency = None, True
+    for kind, us_cold, us_warm, hits, misses in plan_rows:
+        print(f"serve/plan_{kind},{us_warm:.1f},"
+              f"cold_us_per_batch={us_cold:.1f} "
+              f"speedup={us_cold / max(us_warm, 1e-9):.2f}x "
+              f"plan_hits={hits} plan_misses={misses}")
+        plan_hits_min = hits if plan_hits_min is None \
+            else min(plan_hits_min, hits)
+        if not args.smoke and kind in ("sharded", "bsr"):
+            # ISSUE 4 acceptance: warm-plan serving must be measurably
+            # faster than cold-plan on the layout-heavy backends
+            ok_plan_latency = ok_plan_latency and us_warm < us_cold
+
     from repro.kernels import resolve_interpret
     # the >=3x gate targets compiled sweeps; BSR under the Pallas
     # interpreter (non-TPU hosts) is a correctness vehicle, not a perf one;
@@ -284,8 +337,16 @@ def main():
           f"({warm_iters:.1f} vs {cold_iters:.1f})")
     print(f"ACCEPTANCE queued==sync<=1e-10: {'PASS' if ok_queue else 'FAIL'} "
           f"({queue_l1:.2e})")
+    # the repeat-traffic leg must hit the plan cache on every backend —
+    # armed in --smoke too (the CI tripwire the plan layer is gated by)
+    ok_plan_hits = plan_hits_min is not None and plan_hits_min >= 1
+    print(f"ACCEPTANCE plan_hits>=1: {'PASS' if ok_plan_hits else 'FAIL'} "
+          f"(min over backends: {plan_hits_min})")
+    print(f"ACCEPTANCE warm_plan<cold_plan: "
+          f"{('PASS' if ok_plan_latency else 'FAIL') if not args.smoke else 'SKIP (smoke)'} "
+          f"(sharded+bsr)")
     return 0 if (ok_speed and ok_match and ok_warm and ok_ladder
-                 and ok_queue) else 1
+                 and ok_queue and ok_plan_hits and ok_plan_latency) else 1
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ class RankingConfig:
     # sweep backend for the batched column sweep (see serve.backends)
     serve_backend: str = "auto"   # dense | sharded | bsr | auto
     serve_shard_mode: str = "dual_blocked"  # replicated | dual_blocked
+    # plan cache (serve.plans.PlanCache): LRU of per-union-subgraph
+    # structural layouts; <= 0 disables
+    serve_plan_cache: int = 64
+    # bsr: fused on-device convergence loop (one dispatch per batch)
+    serve_bsr_fused: bool = True
     # async micro-batching frontend (serve.queue.RankQueue)
     serve_deadline_ms: float = 5.0  # max extra batching latency per request
     serve_queue_depth: int = 0      # distinct pending bound (0: 4*v_max)

@@ -6,13 +6,14 @@ seg_matmul: tiled segment-sum as one-hot MXU matmul (GNN aggregation,
           EmbeddingBag reduce, HITS edge scatter).
 Validated in interpret=True mode against ref.py oracles; TPU is the target.
 """
-from .bsr_spmm import bsr_scaled_matvec, resolve_interpret
-from .ops import (DeviceBSR, bsr_matvec, build_tiled_segments,
+from .bsr_spmm import bsr_converge_cols, bsr_scaled_matvec, resolve_interpret
+from .ops import (DeviceBSR, bsr_converge, bsr_matvec, build_tiled_segments,
                   hits_sweep_bsr, pad_empty_rows, pad_messages, seg_aggregate)
 from .seg_matmul import seg_matmul
 
 __all__ = [
-    "bsr_scaled_matvec", "resolve_interpret", "DeviceBSR", "bsr_matvec",
+    "bsr_scaled_matvec", "bsr_converge_cols", "resolve_interpret",
+    "DeviceBSR", "bsr_converge", "bsr_matvec",
     "build_tiled_segments", "hits_sweep_bsr", "pad_empty_rows",
     "pad_messages", "seg_aggregate", "seg_matmul",
 ]

@@ -106,3 +106,63 @@ def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
     return _bsr_scaled_matvec(blocks, idx, x, cin, bs=bs,
                               interpret=resolve_interpret(interpret),
                               accum_dtype=accum_dtype)
+
+
+# ------------------------------------------------- fused convergence loop
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret", "accum_dtype",
+                                             "max_iter"))
+def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
+                      tol, *, bs: int, interpret: bool, accum_dtype,
+                      max_iter: int):
+    """On-device masked multi-column accelerated-HITS convergence over two
+    BSR operators: ``lax.while_loop`` around the Pallas sweep, tolerance
+    check in the carry.
+
+    The host-driven alternative round-trips per iteration (launch both
+    half-step kernels, pull the residual to the host, decide); this runs
+    the whole loop as ONE device dispatch per batch — the per-column L1
+    residuals live in the carry, ``conv[j]`` records the sweep at which
+    column j first hit ``tol`` (== the final sweep count when it never
+    did), and all columns keep sweeping until the last converges
+    (converged columns sit at their fixed point). ``tol`` is a traced
+    argument, so retuning tolerance never recompiles.
+
+    lt_*: the transpose operator (authority half-step), l_*: the forward
+    operator (hub half-step); h0/ca/ch/mask: (n_pad, V). Returns
+    (h, a, conv) — per-column L1-normalized fixed-point vectors and the
+    int32 sweep counts. Matches the host-driven loop bit-for-bit in exact
+    arithmetic (identical op order and normalization eps).
+    """
+    def half(blocks, idx, x, cin):
+        return _bsr_scaled_matvec(blocks, idx, x, cin, bs=bs,
+                                  interpret=interpret,
+                                  accum_dtype=accum_dtype)
+
+    def sweep(h):
+        a = half(lt_blocks, lt_idx, h, ch) * mask
+        h_new = half(l_blocks, l_idx, a, ca) * mask
+        return h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=True)
+                        + 1e-30)
+
+    def body(state):
+        h, k, conv = state
+        h_new = sweep(h)
+        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
+        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+        return h_new, k + 1, conv
+
+    def cond(state):
+        _h, k, conv = state
+        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+    init = (h0, jnp.array(0, jnp.int32),
+            jnp.full((h0.shape[1],), -1, jnp.int32))
+    h, k, conv = jax.lax.while_loop(cond, body, init)
+    conv = jnp.where(conv < 0, k, conv)  # hit max_iter (or max_iter == 0)
+    # finalize: recompute authority from the converged h, as the host loop
+    # (and hits._finalize) does
+    a = half(lt_blocks, lt_idx, h, ch) * mask
+    a = a / (jnp.sum(jnp.abs(a), axis=0, keepdims=True) + 1e-30)
+    return h, a, conv

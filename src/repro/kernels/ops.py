@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.structure import BSR, Graph, to_bsr
-from .bsr_spmm import bsr_scaled_matvec, resolve_interpret
+from .bsr_spmm import bsr_converge_cols, bsr_scaled_matvec, resolve_interpret
 from .seg_matmul import seg_matmul
 
 
@@ -73,6 +73,31 @@ def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
                           interpret=interpret, accum_dtype=accum_dtype)
     y = y[: dbsr.n_nodes]
     return y[:, 0] if squeeze else y
+
+
+def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
+                 max_iter: int, interpret: bool | None = None,
+                 accum_dtype=jnp.float32):
+    """Fused on-device convergence loop over a DeviceBSR operator pair.
+
+    a = Lᵀ(h ⊙ ch)·mask;  h' = L(a ⊙ ca)·mask;  h' ← h'/‖h'‖₁, iterated by
+    ``bsr_converge_cols``'s ``lax.while_loop`` until every column's L1
+    residual hits ``tol`` (or ``max_iter``) — one device dispatch per
+    batch, no per-iteration host sync. h0/ca/ch/mask: (n, V) with
+    n <= lt.n_pad (rows pad with zeros and slice back off). Returns
+    (h, a, conv) shaped like the inputs.
+    """
+    assert lt.bs == lfwd.bs and lt.n_pad == lfwd.n_pad, "mismatched operators"
+    n = h0.shape[0]
+    pad = lt.n_pad - n
+    args = (h0, ca, ch, mask)
+    if pad:
+        args = tuple(jnp.pad(x, ((0, pad), (0, 0))) for x in args)
+    h, a, conv = bsr_converge_cols(
+        lt.blocks, lt.idx, lfwd.blocks, lfwd.idx, *args, tol,
+        bs=lt.bs, interpret=resolve_interpret(interpret),
+        accum_dtype=accum_dtype, max_iter=max_iter)
+    return h[:n], a[:n], conv
 
 
 def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,

@@ -66,6 +66,14 @@ def main():
                     help="sharded backend edge-shard strategy")
     ap.add_argument("--shard-devices", type=int, default=None,
                     help="sharded backend device count (default: all)")
+    ap.add_argument("--plan-cache", type=int,
+                    default=CONFIG.serve_plan_cache,
+                    help="SweepPlan LRU entries (structural layouts cached "
+                         "per union-subgraph hash; 0 disables)")
+    ap.add_argument("--bsr-host-loop", action="store_true",
+                    default=not CONFIG.serve_bsr_fused,
+                    help="bsr: host-driven convergence loop instead of the "
+                         "fused on-device lax.while_loop")
     ap.add_argument("--frontend", default="sync",
                     choices=["sync", "queued"],
                     help="sync: pre-built v_max chunks; queued: async "
@@ -100,6 +108,8 @@ def main():
                                  backend=args.backend,
                                  shard_mode=args.shard_mode,
                                  shard_devices=args.shard_devices,
+                                 plan_cache_size=args.plan_cache,
+                                 bsr_fused=not args.bsr_host_loop,
                                  deadline_ms=args.deadline_ms,
                                  queue_depth=args.queue_depth,
                                  spill_dir=spill,
@@ -149,6 +159,11 @@ def main():
           f"backend {args.backend}: {s['backend_batches']})")
     print(f"cache: {s['hit']} hits / {s['warm']} warm / {s['cold']} cold "
           f"({s['hit'] / max(s['queries'], 1):.1%} hit rate)")
+    pt = s["plan_hits"] + s["plan_misses"]
+    print(f"plans: {s['plan_hits']} hits / {s['plan_misses']} built / "
+          f"{s['plan_evictions']} evicted "
+          f"({s['plan_hits'] / max(pt, 1):.1%} plan hit rate, "
+          f"cache {'off' if args.plan_cache <= 0 else args.plan_cache})")
     if lat is not None:
         print(f"latency: p50 {np.percentile(lat, 50):.1f}ms "
               f"p95 {np.percentile(lat, 95):.1f}ms max {lat.max():.1f}ms")

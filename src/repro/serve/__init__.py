@@ -1,8 +1,10 @@
 from .backends import (BACKENDS, BsrSweepBackend, DenseSweepBackend,
                        ShardedSweepBackend, SweepBackend, SweepBatch,
-                       make_backend, select_backend)
+                       make_backend, select_backend, shared_mesh)
 from .kvquant import (dequantize_kv, init_quant_cache, quant_decode_attention,
                       quantize_kv, update_quant_cache)
+from .plans import (BsrPlan, DensePlan, PlanCache, ShardedPlan, SweepPlan,
+                    structure_key)
 from .queue import QueueTicket, RankQueue
 from .rank_service import (QueryResult, RankService, RankServiceConfig)
 from .spill import CacheSpill
@@ -14,5 +16,7 @@ __all__ = [
     "RankQueue", "QueueTicket", "CacheSpill",
     "BACKENDS", "SweepBackend", "SweepBatch", "DenseSweepBackend",
     "ShardedSweepBackend", "BsrSweepBackend", "make_backend",
-    "select_backend",
+    "select_backend", "shared_mesh",
+    "SweepPlan", "DensePlan", "ShardedPlan", "BsrPlan", "PlanCache",
+    "structure_key",
 ]

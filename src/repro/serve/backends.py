@@ -15,6 +15,19 @@ runs the masked multi-column accelerated-HITS convergence loop:
                 per-column fused diagonals, after ``core.reordering``
                 blocking (non-dangling-first node order so nonzeros cluster
                 into dense blocks) — the dense-block accelerator regime.
+                The convergence loop fuses on-device by default
+                (``kernels.bsr_converge_cols``: ``lax.while_loop`` around
+                the Pallas sweep, one dispatch per batch); ``fused=False``
+                keeps the host-driven loop as the parity reference.
+
+Each backend splits its work along the plan/sweep seam (``serve.plans``):
+``plan(batch)`` builds the graph-structure-only artifact — device edge
+list (dense), pow2-bucketed device edge shards + the shared mesh
+(sharded), blocking permutation + both BSR structures (bsr) — and
+``sweep(plan, batch)`` runs the convergence loop against it.
+``converge(batch)`` is the uncached composition; ``RankService`` LRU-caches
+plans per union-subgraph hash so repeat traffic skips all host-side layout
+rebuilding.
 
 All backends compute the same fixed point (the parity suite holds them to
 <=1e-10 L1 of the dense oracle), so everything above the interface —
@@ -36,12 +49,15 @@ from ..core.hits import EdgeList, hits_sweep_cols
 from ..core.reordering import blocking_permutation
 from ..graph.structure import Graph
 from ..kernels.bsr_spmm import resolve_interpret
-from ..kernels.ops import DeviceBSR, bsr_matvec
+from ..kernels.ops import DeviceBSR, bsr_converge, bsr_matvec
 from ..sparse.dist import (build_edge_shards_cols,
                            collective_bytes_per_sweep_cols,
+                           device_put_edge_args_cols,
                            make_dist_hits_sweep_cols,
                            wire_bytes_from_collectives)
 from ..sparse.spmv import normalize_l1, spmv_dst
+from .plans import (BsrPlan, DensePlan, ShardedPlan, SweepPlan,
+                    structure_key)
 
 BACKENDS = ("dense", "sharded", "bsr")
 
@@ -71,20 +87,49 @@ class SweepBatch:
     max_iter: int
     dtype: object
 
+    def structure_key(self) -> str:
+        """Hash of the structure-only fields a plan may depend on."""
+        return structure_key(self.src, self.dst, self.w, self.h0.shape[0],
+                             self.dtype)
+
 
 class SweepBackend:
-    """Interface: converge one batch to (h, a, conv) numpy arrays.
+    """Interface: plan the structure, then converge batches against it.
 
-    ``h``/``a`` are (n_pad, V) — per-column L1-normalized hub and authority
-    vectors at the fixed point; ``conv[j]`` is the sweep at which column j
-    first hit tol (== max_iter when it never did).
+    ``plan(batch)`` consumes only the batch's structural fields (src/dst/w,
+    n_pad, dtype) and returns the backend's ``SweepPlan``;
+    ``sweep(plan, batch)`` runs the convergence loop and returns
+    (h, a, conv) numpy arrays — ``h``/``a`` are (n_pad, V) per-column
+    L1-normalized hub/authority vectors at the fixed point, ``conv[j]`` the
+    sweep at which column j first hit tol (== max_iter when it never did).
+    ``converge(batch)`` is the uncached composition. ``plan_params()``
+    feeds the plan-cache key: every backend knob that changes the plan's
+    layout must appear in it.
     """
 
     name: str = "?"
 
+    def plan_params(self) -> tuple:
+        return ()
+
+    def plan(self, batch: SweepBatch, key: str = "") -> SweepPlan:
+        raise NotImplementedError
+
+    def sweep(self, plan: SweepPlan, batch: SweepBatch
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
     def converge(self, batch: SweepBatch
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        raise NotImplementedError
+        return self.sweep(self.plan(batch), batch)
+
+    def _check(self, plan: SweepPlan, batch: SweepBatch):
+        # cheap structural guard (the full content hash already gated the
+        # cache lookup; re-hashing here would double the host cost)
+        if plan.backend != self.name or plan.n_pad != batch.h0.shape[0]:
+            raise ValueError(
+                f"plan {plan.backend!r}/n_pad={plan.n_pad} does not fit "
+                f"batch {self.name!r}/n_pad={batch.h0.shape[0]}")
 
 
 # ------------------------------------------------------------------- dense
@@ -127,11 +172,17 @@ class DenseSweepBackend(SweepBackend):
 
     name = "dense"
 
-    def converge(self, b: SweepBatch):
+    def plan(self, b: SweepBatch, key: str = "") -> DensePlan:
+        # the dense "layout" is just the device-resident edge list: cached
+        # plans skip the per-batch host->device edge transfer
+        return DensePlan(key=key or b.structure_key(), backend=self.name,
+                         n_pad=b.h0.shape[0], src=jnp.asarray(b.src),
+                         dst=jnp.asarray(b.dst), w=jnp.asarray(b.w, b.dtype))
+
+    def sweep(self, plan: DensePlan, b: SweepBatch):
+        self._check(plan, b)
         h, a, conv = _converge_batch(
-            jnp.asarray(b.h0, b.dtype),
-            jnp.asarray(b.src), jnp.asarray(b.dst),
-            jnp.asarray(b.w, b.dtype),
+            jnp.asarray(b.h0, b.dtype), plan.src, plan.dst, plan.w,
             jnp.asarray(b.ca, b.dtype), jnp.asarray(b.ch, b.dtype),
             jnp.asarray(b.mask, b.dtype), b.tol, b.max_iter)
         return np.asarray(h), np.asarray(a), np.asarray(conv)
@@ -141,6 +192,21 @@ class DenseSweepBackend(SweepBackend):
 
 # jitted converge per (mesh, mode, shape bucket) — shared across services
 _SHARDED_JIT: Dict[tuple, object] = {}
+
+# process-wide mesh per (device subset, axes): meshes are pure structure,
+# so every backend instance (and every plan) over the same device subset
+# shares ONE object — repeat batches and fresh services alike never pay
+# compat.make_mesh again, and mesh-keyed jit caches keep hitting
+_MESH_CACHE: Dict[tuple, object] = {}
+
+
+def shared_mesh(devices, axes):
+    key = (tuple(d.id for d in devices), tuple(axes))
+    mesh = _MESH_CACHE.get(key)
+    if mesh is None:
+        mesh = make_mesh((len(devices),), tuple(axes), devices=devices)
+        _MESH_CACHE[key] = mesh
+    return mesh
 
 
 def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes):
@@ -194,7 +260,7 @@ class ShardedSweepBackend(SweepBackend):
         self.mode = mode
         self.n_shards = s
         self.axes = (axis,)
-        self.mesh = make_mesh((s,), self.axes, devices=devices[:s])
+        self.mesh = shared_mesh(devices[:s], self.axes)
 
     def collective_bytes_per_sweep(self, n_pad: int, v: int,
                                    itemsize: int = 8) -> int:
@@ -202,42 +268,49 @@ class ShardedSweepBackend(SweepBackend):
         return collective_bytes_per_sweep_cols(self.mode, n_pad, v,
                                                self.n_shards, itemsize)
 
-    def _layout(self, shards, h0, ca, ch, m, dtype):
-        """Device layout (h0, ca, ch, m, eargs) for the cols sweep.
+    def plan_params(self) -> tuple:
+        return (self.mode, self.n_shards, self.axes)
 
-        The single owner of the sweep's calling convention: edge-arg
-        ordering ((src, dst, w) x (a, h) for dual_blocked) and the blocked
-        h layout. dual_blocked pads node rows to nb*S >= n_pad — non-pow2
-        device counts get dead extra rows (zero weights/mask/h0), like the
-        service's pad row.
-        """
-        if self.mode == "replicated":
-            eargs = (jnp.asarray(shards["src"]), jnp.asarray(shards["dst"]),
-                     jnp.asarray(shards["w"], dtype))
-            return (jnp.asarray(h0, dtype), jnp.asarray(ca, dtype),
-                    jnp.asarray(ch, dtype), jnp.asarray(m, dtype), eargs)
-        nb = shards["nb"]
-        n_rows, v = np.shape(h0)
-        rows = ((0, nb * self.n_shards - n_rows), (0, 0))
-        h0, ca, ch, m = (np.pad(np.asarray(x), rows) for x in (h0, ca, ch, m))
-        eargs = ()
-        for part in (shards["a"], shards["h"]):
-            eargs += (jnp.asarray(part["src"]), jnp.asarray(part["dst"]),
-                      jnp.asarray(part["w"], dtype))
-        return (jnp.asarray(h0.reshape(self.n_shards, nb, v), dtype),
-                jnp.asarray(ca, dtype), jnp.asarray(ch, dtype),
-                jnp.asarray(m, dtype), eargs)
-
-    def converge(self, b: SweepBatch):
-        n_pad, v = b.h0.shape
+    def plan(self, b: SweepBatch, key: str = "") -> ShardedPlan:
+        """Host-side edge partition + device transfer + the shared mesh —
+        everything per-batch work used to rebuild that only depends on the
+        union subgraph's structure."""
+        n_pad = b.h0.shape[0]
         shards = build_edge_shards_cols(b.src, b.dst, b.w, n_pad,
                                         self.n_shards, self.mode)
-        h0, ca, ch, m, eargs = self._layout(shards, b.h0, b.ca, b.ch,
-                                            b.mask, b.dtype)
-        fn = _sharded_converge(self.mesh, self.mode, n_pad, shards["per"], v,
+        return ShardedPlan(key=key or b.structure_key(), backend=self.name,
+                           n_pad=n_pad, mesh=self.mesh, mode=self.mode,
+                           n_shards=self.n_shards, per=shards["per"],
+                           nb=int(shards.get("nb", 0)),
+                           eargs=device_put_edge_args_cols(shards, b.dtype))
+
+    def _vector_layout(self, plan: ShardedPlan, h0, ca, ch, m, dtype):
+        """Per-batch device layout of the (n_pad, V) vectors.
+
+        dual_blocked pads node rows to nb*S >= n_pad — non-pow2 device
+        counts get dead extra rows (zero weights/mask/h0), like the
+        service's pad row — and iterates h in (S, nb, V) blocked form.
+        """
+        if plan.mode == "replicated":
+            return (jnp.asarray(h0, dtype), jnp.asarray(ca, dtype),
+                    jnp.asarray(ch, dtype), jnp.asarray(m, dtype))
+        nb = plan.nb
+        n_rows, v = np.shape(h0)
+        rows = ((0, nb * plan.n_shards - n_rows), (0, 0))
+        h0, ca, ch, m = (np.pad(np.asarray(x), rows) for x in (h0, ca, ch, m))
+        return (jnp.asarray(h0.reshape(plan.n_shards, nb, v), dtype),
+                jnp.asarray(ca, dtype), jnp.asarray(ch, dtype),
+                jnp.asarray(m, dtype))
+
+    def sweep(self, plan: ShardedPlan, b: SweepBatch):
+        self._check(plan, b)
+        n_pad, v = b.h0.shape
+        h0, ca, ch, m = self._vector_layout(plan, b.h0, b.ca, b.ch, b.mask,
+                                            b.dtype)
+        fn = _sharded_converge(plan.mesh, plan.mode, n_pad, plan.per, v,
                                b.max_iter, b.dtype, self.axes)
-        with set_mesh(self.mesh):
-            h, a, conv = fn(h0, ca, ch, m, eargs, b.tol)
+        with set_mesh(plan.mesh):
+            h, a, conv = fn(h0, ca, ch, m, plan.eargs, b.tol)
         h = np.asarray(h).reshape(-1, v)[:n_pad]
         a = np.asarray(a).reshape(-1, v)[:n_pad]
         return h, a, np.asarray(conv)
@@ -247,16 +320,17 @@ class ShardedSweepBackend(SweepBackend):
         """Compile ONE sweep at these shapes and measure per-device ring
         wire bytes from the optimized HLO (the bench/test ladder probe)."""
         from ..launch.hlo_analysis import collective_bytes
-        shards = build_edge_shards_cols(src, dst, w, n_pad, self.n_shards,
-                                        self.mode)
         zeros = np.zeros((n_pad, v))
-        h0, ca, ch, m, eargs = self._layout(shards, zeros, zeros, zeros,
+        plan = self.plan(SweepBatch(
+            h0=zeros, src=src, dst=dst, w=w, ca=zeros, ch=zeros, mask=zeros,
+            tol=0.0, max_iter=1, dtype=dtype))
+        h0, ca, ch, m = self._vector_layout(plan, zeros, zeros, zeros,
                                             zeros, dtype)
-        smapped = make_dist_hits_sweep_cols(self.mesh, self.mode, n_pad,
+        smapped = make_dist_hits_sweep_cols(plan.mesh, self.mode, n_pad,
                                             axes=self.axes)
-        with set_mesh(self.mesh):
+        with set_mesh(plan.mesh):
             compiled = jax.jit(smapped).lower(h0, ca, ch, m,
-                                              *eargs).compile()
+                                              *plan.eargs).compile()
         return wire_bytes_from_collectives(
             collective_bytes(compiled.as_text())["by_kind"], self.n_shards)
 
@@ -271,19 +345,29 @@ class BsrSweepBackend(SweepBackend):
     permutation (non-dangling pages first, degree-descending) so structural
     nonzeros cluster into dense (bs x bs) blocks, then each half-step is one
     ``bsr_scaled_matvec`` with the column's induced diagonal fused into the
-    block matmul prologue. The convergence loop runs host-side: per-sweep
-    kernel dispatches dominate only for tiny subgraphs, and the loop must
-    see per-column residuals anyway.
+    block matmul prologue. The convergence loop is fused on-device by
+    default (``kernels.bsr_converge_cols``: ``lax.while_loop`` with the
+    tolerance check in the carry — one dispatch per batch, the TPU serving
+    path); ``fused=False`` keeps the host-driven loop, which pays a
+    host<->device round trip per iteration and serves as the fused loop's
+    parity reference.
     """
 
     name = "bsr"
 
-    def __init__(self, bs: int = 128, interpret: Optional[bool] = None):
+    def __init__(self, bs: int = 128, interpret: Optional[bool] = None,
+                 fused: bool = True):
         self.bs = bs
         self.interpret = interpret
+        self.fused = fused
 
-    def converge(self, b: SweepBatch):
-        n_pad, v = b.h0.shape
+    def plan_params(self) -> tuple:
+        return (self.bs,)
+
+    def plan(self, b: SweepBatch, key: str = "") -> BsrPlan:
+        """Blocking permutation + both BSR structures — the expensive
+        host-side layout work (two block builds) repeat batches skip."""
+        n_pad = b.h0.shape[0]
         real = np.asarray(b.w) != 0  # drop sentinel padding edges
         src, dst = np.asarray(b.src)[real], np.asarray(b.dst)[real]
         w = np.asarray(b.w)[real]
@@ -293,25 +377,44 @@ class BsrSweepBackend(SweepBackend):
         g = Graph(n_pad, inv[src], inv[dst])
         bs = min(self.bs, n_pad)
         accum = b.dtype if np.dtype(b.dtype) == np.float64 else jnp.float32
-        lt = DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype, values=w)
-        lfwd = DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
-                               values=w)
+        return BsrPlan(
+            key=key or b.structure_key(), backend=self.name, n_pad=n_pad,
+            perm=perm, inv=inv,
+            lt=DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype,
+                               values=w),
+            lfwd=DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
+                                 values=w),
+            bs=bs, accum_dtype=accum)
+
+    def sweep(self, plan: BsrPlan, b: SweepBatch):
+        self._check(plan, b)
+        perm, inv = plan.perm, plan.inv
         ca = jnp.asarray(b.ca[perm], b.dtype)
         ch = jnp.asarray(b.ch[perm], b.dtype)
         m = jnp.asarray(b.mask[perm], b.dtype)
         h = jnp.asarray(b.h0[perm], b.dtype)
+        if self.fused:
+            h, a, conv = bsr_converge(plan.lt, plan.lfwd, h, ca, ch, m,
+                                      b.tol, b.max_iter, self.interpret,
+                                      plan.accum_dtype)
+            return (np.asarray(h)[inv], np.asarray(a)[inv],
+                    np.asarray(conv))
+        # host-driven reference loop: one residual round trip per sweep
+        v = b.h0.shape[1]
         conv = np.full(v, -1, np.int32)
         k = 0
         while k < b.max_iter and (conv < 0).any():
-            a = bsr_matvec(lt, h, ch, self.interpret, accum) * m
-            h_new = bsr_matvec(lfwd, a, ca, self.interpret, accum) * m
+            a = bsr_matvec(plan.lt, h, ch, self.interpret,
+                           plan.accum_dtype) * m
+            h_new = bsr_matvec(plan.lfwd, a, ca, self.interpret,
+                               plan.accum_dtype) * m
             h_new = normalize_l1(h_new, axis=0)
             delta = np.asarray(jnp.sum(jnp.abs(h_new - h), axis=0))
             k += 1
             conv = np.where((conv < 0) & (delta <= b.tol), k, conv)
             h = h_new
         conv = np.where(conv < 0, k, conv)
-        a = bsr_matvec(lt, h, ch, self.interpret, accum) * m
+        a = bsr_matvec(plan.lt, h, ch, self.interpret, plan.accum_dtype) * m
         a = normalize_l1(a, axis=0)
         return (np.asarray(h)[inv], np.asarray(a)[inv], conv)
 
@@ -344,11 +447,13 @@ def select_backend(n_union: int, e_union: int,
 
 def make_backend(kind: str, *, shard_mode: str = "dual_blocked",
                  shard_devices: Optional[int] = None, bsr_block: int = 128,
-                 interpret: Optional[bool] = None) -> SweepBackend:
+                 interpret: Optional[bool] = None,
+                 bsr_fused: bool = True) -> SweepBackend:
     if kind == "dense":
         return DenseSweepBackend()
     if kind == "sharded":
         return ShardedSweepBackend(mode=shard_mode, n_devices=shard_devices)
     if kind == "bsr":
-        return BsrSweepBackend(bs=bsr_block, interpret=interpret)
+        return BsrSweepBackend(bs=bsr_block, interpret=interpret,
+                               fused=bsr_fused)
     raise ValueError(f"unknown backend {kind!r} (want one of {BACKENDS})")

@@ -1,0 +1,161 @@
+"""SweepPlan: the graph-structure-only half of a serving batch, cached.
+
+The serving hot path spends most of its host time *around* the sweep:
+the sharded backend rebuilds pow2-bucketed edge shards per batch, the BSR
+backend recomputes its blocking permutation and both BSR structures, and
+even the dense path re-ships the edge list to the device. All of that
+depends ONLY on the union subgraph's structure (src/dst/w/n_pad) — not on
+which columns, start vectors, or weights ride in the batch — so
+repeat-heavy traffic (the cache's bread and butter; Benzi et al. motivate
+reusing one structural factorization across many ranking queries) can pay
+the layout cost once per distinct union subgraph.
+
+This module owns the abstraction:
+
+* ``SweepPlan``     — the backend-specific structural artifact. ``dense``:
+                      device-resident edge list; ``sharded``: pow2-bucketed
+                      edge shards on device + the shared mesh; ``bsr``: the
+                      blocking permutation and both DeviceBSR structures.
+* ``structure_key`` — content hash of the padded edge structure. Keys hash
+                      the ACTUAL edges (not just the union node set), so a
+                      mutated graph can never serve a stale plan: changed
+                      structure => changed key => plan rebuild.
+* ``PlanCache``     — a small LRU of plans (``RankService`` holds one,
+                      ``plan_cache_size`` entries).
+
+Backends implement ``plan(batch) -> SweepPlan`` (structure only) and
+``sweep(plan, batch)`` (the convergence loop); ``converge(batch)`` is the
+uncached composition. See ``serve.backends``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+
+def structure_key(src, dst, w, n_pad: int, dtype) -> str:
+    """Content hash of the padded union-subgraph structure.
+
+    Everything a plan may depend on is hashed: padded node count, the
+    sentinel-padded edge arrays, edge weights, and the sweep dtype. Two
+    batches agree on this key iff their structural layout work is
+    byte-identical, so a cached plan is always safe to reuse — and a graph
+    mutation (same node ids, different edges) necessarily changes the key.
+    """
+    hsh = hashlib.sha1()
+    hsh.update(np.int64(n_pad).tobytes())
+    hsh.update(str(np.dtype(dtype)).encode())
+    for arr in (src, dst, w):
+        a = np.ascontiguousarray(arr)
+        hsh.update(str(a.dtype).encode())
+        hsh.update(a.tobytes())
+    return hsh.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Base: what every backend's structural artifact carries.
+
+    ``key`` is the ``structure_key`` the plan was built from (sweeps assert
+    against the batch), ``backend`` the owning backend's name, ``n_pad``
+    the padded node count the layout was sized for.
+    """
+
+    key: str
+    backend: str
+    n_pad: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePlan(SweepPlan):
+    """Device-resident padded edge list (src/dst/w already shipped)."""
+
+    src: object = None   # jnp (e_pad,) int32
+    dst: object = None
+    w: object = None     # jnp (e_pad,) sweep dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan(SweepPlan):
+    """Pow2-bucketed edge shards on device + the (shared) mesh.
+
+    ``eargs`` is the sweep's device edge-argument tuple in calling-
+    convention order ((src, dst, w) for replicated; (asrc, adst, aw, hsrc,
+    hdst, hw) for dual_blocked). ``mesh`` is the process-wide shared mesh
+    for this device subset — hoisted here so repeat batches (and repeat
+    services) reuse one mesh object instead of re-creating it.
+    """
+
+    mesh: object = None
+    mode: str = ""
+    n_shards: int = 0
+    per: int = 0         # padded per-shard edge bucket
+    nb: int = 0          # dual_blocked node-block size (0 for replicated)
+    eargs: Tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BsrPlan(SweepPlan):
+    """Blocking permutation + both BSR structures for the Pallas path.
+
+    ``perm``/``inv`` are the ``core.reordering.blocking_permutation`` node
+    order and its inverse; ``lt``/``lfwd`` the transpose/forward DeviceBSR
+    built in the permuted space. Per-column diagonals, masks, and start
+    vectors stay batch-side (permuted at sweep time).
+    """
+
+    perm: object = None  # np (n_pad,) new -> old
+    inv: object = None   # np (n_pad,) old -> new
+    lt: object = None    # DeviceBSR, transpose (authority half-step)
+    lfwd: object = None  # DeviceBSR, forward (hub half-step)
+    bs: int = 0
+    accum_dtype: object = None
+
+
+class PlanCache:
+    """LRU of SweepPlans keyed by (backend, params, structure hash).
+
+    ``capacity <= 0`` disables caching (``get`` always misses and ``put``
+    drops). Stats: ``hits`` / ``misses`` / ``evictions``.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = int(capacity)
+        self._plans: "OrderedDict[tuple, SweepPlan]" = OrderedDict()
+        self.stats: Dict[str, int] = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, key: tuple) -> Optional[SweepPlan]:
+        plan = self._plans.get(key)
+        if plan is None:
+            self.stats["misses"] += 1
+            return None
+        self._plans.move_to_end(key)
+        self.stats["hits"] += 1
+        return plan
+
+    def put(self, key: tuple, plan: SweepPlan):
+        if self.capacity <= 0:
+            return
+        self._plans[key] = plan
+        self._plans.move_to_end(key)
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    def get_or_build(self, key: tuple,
+                     build: Callable[[], SweepPlan]) -> SweepPlan:
+        plan = self.get(key)
+        if plan is None:
+            plan = build()
+            self.put(key, plan)
+        return plan
+
+    def clear(self):
+        self._plans.clear()

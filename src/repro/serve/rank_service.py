@@ -39,6 +39,7 @@ from ..core.weights import accel_weights
 from ..graph.structure import Graph, next_pow2
 from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor, root_set_key
 from .backends import SweepBackend, SweepBatch, make_backend, select_backend
+from .plans import PlanCache, SweepPlan
 
 
 @dataclasses.dataclass
@@ -56,6 +57,11 @@ class RankServiceConfig:
     shard_devices: Optional[int] = None  # sharded: device count (None: all)
     bsr_block: int = 128       # bsr: block size (MXU-aligned on TPU)
     interpret: Optional[bool] = None   # bsr: Pallas interpret override
+    bsr_fused: bool = True     # bsr: fused on-device convergence loop
+    # plan cache (serve.plans): LRU of per-union-subgraph structural
+    # layouts (edge shards, BSR blockings, device edge lists) so repeat
+    # root sets skip host-side rebuilds; <= 0 disables
+    plan_cache_size: int = 64
     # async micro-batching frontend (serve.queue.RankQueue / .queue()):
     deadline_ms: float = 5.0   # max extra latency batching may add
     queue_depth: Optional[int] = None  # max distinct pending (None: 4*v_max)
@@ -118,11 +124,13 @@ class RankService:
                                            self.cfg.in_cap)
         self._backends: Dict[str, SweepBackend] = {}
         self._cache: OrderedDict[str, _CacheEntry] = OrderedDict()
+        self._plans = PlanCache(self.cfg.plan_cache_size)
         # last converged scores per global node — the warm-start table
         self._warm_h = np.zeros(g.n_nodes)
         self._warm_seen = np.zeros(g.n_nodes, bool)
         self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
                       "cold": 0, "sweeps": 0, "backend_batches": {},
+                      "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
                       "spill_writes": 0, "spill_hits": 0, "spill_restored": 0}
         self._spill = None
         if self.cfg.spill_dir is not None:
@@ -159,9 +167,33 @@ class RankService:
             be = make_backend(kind, shard_mode=self.cfg.shard_mode,
                               shard_devices=self.cfg.shard_devices,
                               bsr_block=self.cfg.bsr_block,
-                              interpret=self.cfg.interpret)
+                              interpret=self.cfg.interpret,
+                              bsr_fused=self.cfg.bsr_fused)
             self._backends[kind] = be
         return be
+
+    def _plan_for(self, backend: SweepBackend, batch: SweepBatch) -> SweepPlan:
+        """The backend's structural plan for this batch, LRU-cached by
+        union-subgraph content hash.
+
+        The hash covers the padded edge structure itself (not just the
+        root-set ids), so a mutated graph — same nodes, different edges —
+        changes the key and can never be served a stale layout. Repeat and
+        overlapping root sets that induce the same union subgraph skip all
+        host-side layout rebuilding (edge shards, BSR blocking, device
+        transfer).
+        """
+        skey = batch.structure_key()
+        key = (backend.name, backend.plan_params(), skey)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = backend.plan(batch, skey)
+            self._plans.put(key, plan)
+            self.stats["plan_misses"] += 1
+        else:
+            self.stats["plan_hits"] += 1
+        self.stats["plan_evictions"] = self._plans.stats["evictions"]
+        return plan
 
     # -- cache ------------------------------------------------------------
 
@@ -234,6 +266,15 @@ class RankService:
         for key, e in self._cache.items():
             self._spill.put(key, e.nodes, e.authority, e.hub)
             self.stats["spill_writes"] += 1
+
+    def clear_result_cache(self):
+        """Drop all converged-vector state (LRU entries + the warm-start
+        table) while KEEPING cached plans — the bench's warm-plan /
+        cold-vector leg, and a memory valve for long-lived services.
+        Spilled entries on disk are untouched."""
+        self._cache.clear()
+        self._warm_h[:] = 0.0
+        self._warm_seen[:] = False
 
     # -- serving ----------------------------------------------------------
 
@@ -328,10 +369,11 @@ class RankService:
             self.stats[statuses[j]] += 1
 
         backend = self._backend_for(n_u, e_u)
-        h, a, conv = backend.converge(SweepBatch(
+        batch = SweepBatch(
             h0=h0, src=src, dst=dst, w=w, ca=ca, ch=ch, mask=mask,
             tol=self.cfg.tol, max_iter=self.cfg.max_iter,
-            dtype=self._dtype))
+            dtype=self._dtype)
+        h, a, conv = backend.sweep(self._plan_for(backend, batch), batch)
         self.stats["sweeps"] += int(conv.max(initial=0))
         bb = self.stats["backend_batches"]
         bb[backend.name] = bb.get(backend.name, 0) + 1

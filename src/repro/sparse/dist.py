@@ -274,6 +274,28 @@ def build_edge_shards_cols(src, dst, w, n_pad: int, n_shards: int,
     raise ValueError(mode)
 
 
+def device_put_edge_args_cols(shards, dtype):
+    """Ship ``build_edge_shards_cols`` output to the device as the sweep's
+    edge-argument tuple, in calling-convention order.
+
+    This is the single owner of that ordering — ((src, dst, w) for
+    ``replicated``; (asrc, adst, aw, hsrc, hdst, hw) for ``dual_blocked``)
+    — and the piece the serve plan cache keeps device-resident, so repeat
+    batches over the same union subgraph skip both the host-side
+    partition and the host->device transfer.
+    """
+    if shards["mode"] == "replicated":
+        return (jnp.asarray(shards["src"]), jnp.asarray(shards["dst"]),
+                jnp.asarray(shards["w"], dtype))
+    if shards["mode"] == "dual_blocked":
+        eargs = ()
+        for part in (shards["a"], shards["h"]):
+            eargs += (jnp.asarray(part["src"]), jnp.asarray(part["dst"]),
+                      jnp.asarray(part["w"], dtype))
+        return eargs
+    raise ValueError(shards["mode"])
+
+
 def make_dist_hits_sweep_cols(mesh, mode: str, n_pad: int, axes=("data",)):
     """Multi-column (N, V) distributed sweep matching ``hits_sweep_cols``.
 
