@@ -15,7 +15,12 @@ latency and throughput per rate, plus a queued==sync parity check. ISSUE 4
 adds the plan-hit-rate axis: the same repeat stream served cold-plan vs
 warm-plan (vector cache cleared between passes, ``SweepPlan`` cache kept)
 per backend — the warm leg must hit the plan cache every batch, and on the
-layout-heavy backends (sharded, bsr) must be measurably faster.
+layout-heavy backends (sharded, bsr) must be measurably faster. ISSUE 5
+adds the overlap axis: the same multi-batch stream dispatched serially
+(pipeline depth 1) vs pipelined (depth 2 — host assemble/plan of batch
+k+1 overlaps batch k's device sweep), as a sync stream and a queued
+burst; pipelined must match serial <=1e-10 L1 (armed in --smoke) and beat
+it on q/s in full runs.
 
 ``--smoke`` shrinks everything to a seconds-scale CI tripwire (tiny graph,
 few queries, perf gates skipped — correctness gates still enforced).
@@ -94,6 +99,51 @@ def plan_axis(g, cfg, queries, backends):
                      t_warm / n_batches * 1e6, hits,
                      svc.stats["plan_misses"]))
     return rows
+
+
+def pipeline_axis(g, cfg, queries, deadline_ms):
+    """Serial (depth-1) vs pipelined (depth-2) dispatch on the same
+    multi-batch stream (ISSUE 5's overlap axis).
+
+    Two legs per depth: the synchronous multi-batch ``rank()`` stream and
+    a queued burst (real dispatcher, back-to-back submissions — the
+    arrival leg where overlap matters most). Fresh cold services per
+    depth, compile caches pre-warmed, so the delta is dispatch schedule
+    only: at depth 2 batch k+1's host assemble/plan (and the queue's
+    flush wait) runs while batch k sweeps on device. Solves at tol<=1e-12
+    (like the arrival axis) so the <=1e-10 parity gate has headroom —
+    the two schedules reach the same fixed points from slightly different
+    warm-start states.
+
+    Returns ([(depth, sync us/batch, sync q/s, queued q/s, overlaps)],
+    parity_l1 between the depth-1 and depth-2 sync results).
+    """
+    tight = {"tol": min(1e-12, cfg().tol)}
+    base = cfg
+    cfg = lambda **kw: base(**{**tight, **kw})  # noqa: E731
+
+    RankService(g, cfg()).rank(queries)  # compile warmup (all buckets)
+    rows, res = [], {}
+    for depth in (1, 2):
+        svc = RankService(g, cfg(pipeline_depth=depth))
+        t0 = time.perf_counter()
+        res[depth] = svc.rank(queries)
+        dt = time.perf_counter() - t0
+        n_batches = max(svc.stats["batches"], 1)
+        overlaps = svc.pipeline.overlap_events()
+
+        svcq = RankService(g, cfg(pipeline_depth=depth))
+        t0 = time.perf_counter()
+        with svcq.queue(deadline_ms=deadline_ms) as rq:
+            tickets = [rq.submit(q) for q in queries]
+            for t in tickets:
+                t.result(timeout=600)
+        q_qps = len(queries) / (time.perf_counter() - t0)
+        rows.append((depth, dt / n_batches * 1e6, len(queries) / dt,
+                     q_qps, overlaps))
+    parity_l1 = max(float(np.abs(a.authority - b.authority).sum())
+                    for a, b in zip(res[1], res[2]))
+    return rows, parity_l1
 
 
 def arrival_axis(g, cfg, queries, rates, deadline_ms):
@@ -286,6 +336,16 @@ def main():
               f"batches={qu['batches']} (vmax={qu['vmax']} "
               f"deadline={qu['deadline']})")
 
+    # --- overlap axis: serial (depth-1) vs pipelined (depth-2) dispatch,
+    # sync multi-batch stream + queued burst (ISSUE 5)
+    pipe_rows, pipe_l1 = pipeline_axis(g, cfg, queries, args.deadline_ms)
+    pipe_qps = {}
+    for depth, us_b, s_qps, q_qps, overlaps in pipe_rows:
+        pipe_qps[depth] = (s_qps, q_qps)
+        print(f"serve/pipeline_depth{depth},{us_b:.1f},"
+              f"sync_qps={s_qps:.1f} queued_qps={q_qps:.1f} "
+              f"overlapped={overlaps}")
+
     # --- plan-hit-rate axis: cold-plan vs warm-plan latency per backend
     # (repeat traffic, cold vector cache — isolates the layout rebuild)
     plan_rows = plan_axis(g, cfg, queries, ("dense", "sharded", "bsr"))
@@ -345,8 +405,24 @@ def main():
     print(f"ACCEPTANCE warm_plan<cold_plan: "
           f"{('PASS' if ok_plan_latency else 'FAIL') if not args.smoke else 'SKIP (smoke)'} "
           f"(sharded+bsr)")
+    # ISSUE 5: pipelined dispatch must not change the math (armed in
+    # --smoke) and must beat serial q/s on the multi-batch leg (full run;
+    # best of sync-stream/queued-burst — tiny smoke graphs sweep too fast
+    # to hide host work behind)
+    ok_pipe_parity = pipe_l1 <= 1e-10
+    print(f"ACCEPTANCE pipelined==serial<=1e-10: "
+          f"{'PASS' if ok_pipe_parity else 'FAIL'} ({pipe_l1:.2e})")
+    ok_pipe_speed = True
+    if not args.smoke:
+        ok_pipe_speed = (pipe_qps[2][0] > pipe_qps[1][0]
+                         or pipe_qps[2][1] > pipe_qps[1][1])
+    print(f"ACCEPTANCE pipelined>serial qps: "
+          f"{('PASS' if ok_pipe_speed else 'FAIL') if not args.smoke else 'SKIP (smoke)'} "
+          f"(sync {pipe_qps[2][0]:.1f} vs {pipe_qps[1][0]:.1f}, "
+          f"queued {pipe_qps[2][1]:.1f} vs {pipe_qps[1][1]:.1f})")
     return 0 if (ok_speed and ok_match and ok_warm and ok_ladder
-                 and ok_queue and ok_plan_hits and ok_plan_latency) else 1
+                 and ok_queue and ok_plan_hits and ok_plan_latency
+                 and ok_pipe_parity and ok_pipe_speed) else 1
 
 
 if __name__ == "__main__":

@@ -18,6 +18,10 @@ class RankingConfig:
     # plan cache (serve.plans.PlanCache): LRU of per-union-subgraph
     # structural layouts; <= 0 disables
     serve_plan_cache: int = 64
+    # staged dispatch pipeline (serve.pipeline.ServePipeline): batches in
+    # flight; 1 = serial, >= 2 overlaps host assemble/plan with the
+    # previous batch's device sweep
+    serve_pipeline_depth: int = 2
     # bsr: fused on-device convergence loop (one dispatch per batch)
     serve_bsr_fused: bool = True
     # async micro-batching frontend (serve.queue.RankQueue)

@@ -77,7 +77,7 @@ def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
 
 def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
                  max_iter: int, interpret: bool | None = None,
-                 accum_dtype=jnp.float32):
+                 accum_dtype=jnp.float32, perm=None, inv=None):
     """Fused on-device convergence loop over a DeviceBSR operator pair.
 
     a = Lᵀ(h ⊙ ch)·mask;  h' = L(a ⊙ ca)·mask;  h' ← h'/‖h'‖₁, iterated by
@@ -86,18 +86,35 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     batch, no per-iteration host sync. h0/ca/ch/mask: (n, V) with
     n <= lt.n_pad (rows pad with zeros and slice back off). Returns
     (h, a, conv) shaped like the inputs.
+
+    ``perm``/``inv``: optional (n,) node permutation (new -> old) and its
+    inverse when the operators were built in a reordered space (the BSR
+    blocking permutation). Inputs are gathered by ``perm`` at the loop
+    entry and results scattered back by ``inv`` at the exit via
+    ``jnp.take`` — the whole per-batch vector permutation stays on
+    device, with outputs in the caller's original node order.
     """
     assert lt.bs == lfwd.bs and lt.n_pad == lfwd.n_pad, "mismatched operators"
     n = h0.shape[0]
     pad = lt.n_pad - n
     args = (h0, ca, ch, mask)
+    if perm is not None:
+        perm = jnp.asarray(perm)
+        # a mis-sized permutation would silently clamp-gather wrong rows
+        assert perm.shape[0] == n, (perm.shape, n)
+        args = tuple(jnp.take(x, perm, axis=0) for x in args)
     if pad:
         args = tuple(jnp.pad(x, ((0, pad), (0, 0))) for x in args)
     h, a, conv = bsr_converge_cols(
         lt.blocks, lt.idx, lfwd.blocks, lfwd.idx, *args, tol,
         bs=lt.bs, interpret=resolve_interpret(interpret),
         accum_dtype=accum_dtype, max_iter=max_iter)
-    return h[:n], a[:n], conv
+    h, a = h[:n], a[:n]
+    if inv is not None:
+        inv = jnp.asarray(inv)
+        assert inv.shape[0] == n, (inv.shape, n)
+        h, a = jnp.take(h, inv, axis=0), jnp.take(a, inv, axis=0)
+    return h, a, conv
 
 
 def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,

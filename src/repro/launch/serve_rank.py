@@ -74,6 +74,11 @@ def main():
                     default=not CONFIG.serve_bsr_fused,
                     help="bsr: host-driven convergence loop instead of the "
                          "fused on-device lax.while_loop")
+    ap.add_argument("--pipeline-depth", type=int,
+                    default=CONFIG.serve_pipeline_depth,
+                    help="staged-dispatch batches in flight (1: serial; "
+                         ">=2: overlap host assemble/plan with the "
+                         "previous batch's device sweep)")
     ap.add_argument("--frontend", default="sync",
                     choices=["sync", "queued"],
                     help="sync: pre-built v_max chunks; queued: async "
@@ -110,6 +115,7 @@ def main():
                                  shard_devices=args.shard_devices,
                                  plan_cache_size=args.plan_cache,
                                  bsr_fused=not args.bsr_host_loop,
+                                 pipeline_depth=args.pipeline_depth,
                                  deadline_ms=args.deadline_ms,
                                  queue_depth=args.queue_depth,
                                  spill_dir=spill,
@@ -152,18 +158,24 @@ def main():
         results = svc.rank(stream)
         dt = time.time() - t0
 
-    s = svc.stats
+    s = svc.snapshot_stats()
     iters = [r.iters for r in results if r.iters > 0]
     print(f"served {len(results)} queries in {dt:.2f}s "
           f"({len(results) / dt:.1f} q/s, batch width {args.v}, "
           f"backend {args.backend}: {s['backend_batches']})")
     print(f"cache: {s['hit']} hits / {s['warm']} warm / {s['cold']} cold "
           f"({s['hit'] / max(s['queries'], 1):.1%} hit rate)")
-    pt = s["plan_hits"] + s["plan_misses"]
+    # restored plans skipped a rebuild just like hits did
+    reused = s["plan_hits"] + s["plan_restored"]
+    pt = reused + s["plan_misses"]
     print(f"plans: {s['plan_hits']} hits / {s['plan_misses']} built / "
-          f"{s['plan_evictions']} evicted "
-          f"({s['plan_hits'] / max(pt, 1):.1%} plan hit rate, "
+          f"{s['plan_restored']} restored / {s['plan_evictions']} evicted "
+          f"({reused / max(pt, 1):.1%} plan reuse rate, "
           f"cache {'off' if args.plan_cache <= 0 else args.plan_cache})")
+    ps = svc.pipeline.stats
+    print(f"pipeline: depth {args.pipeline_depth}, {ps['jobs']} jobs / "
+          f"{ps['swept']} swept, "
+          f"{svc.pipeline.overlap_events()} overlapped assembles")
     if lat is not None:
         print(f"latency: p50 {np.percentile(lat, 50):.1f}ms "
               f"p95 {np.percentile(lat, 95):.1f}ms max {lat.max():.1f}ms")

@@ -70,7 +70,7 @@ _BSR_MIN_EDGES_PER_NODE = 8.0
 
 @dataclasses.dataclass(frozen=True)
 class SweepBatch:
-    """One padded serving batch (host arrays; see RankService._rank_batch).
+    """One padded serving batch (host arrays; see ServePipeline.assemble).
 
     h0/ca/ch/mask: (n_pad, V); src/dst/w: (e_pad,) with sentinel edges
     pointing at the dead pad row n_pad-1 carrying w=0.
@@ -122,6 +122,21 @@ class SweepBackend:
     def converge(self, batch: SweepBatch
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         return self.sweep(self.plan(batch), batch)
+
+    def plan_arrays(self, plan: SweepPlan) -> Tuple[Dict, dict]:
+        """The plan's persistable form: ({name: host array}, json-meta).
+
+        ``serve.spill.PlanSpill`` checkpoints these next to the vector
+        spill; ``plan_restore`` rehydrates them into a device-resident
+        plan WITHOUT redoing the layout work (partitioning, blocking,
+        permutation) — the whole point of persisting plans.
+        """
+        raise NotImplementedError
+
+    def plan_restore(self, key: str, arrays: Dict, meta: dict) -> SweepPlan:
+        """Inverse of ``plan_arrays`` (raise/return garbage-intolerant:
+        callers treat any failure as a rebuild)."""
+        raise NotImplementedError
 
     def _check(self, plan: SweepPlan, batch: SweepBatch):
         # cheap structural guard (the full content hash already gated the
@@ -178,6 +193,17 @@ class DenseSweepBackend(SweepBackend):
         return DensePlan(key=key or b.structure_key(), backend=self.name,
                          n_pad=b.h0.shape[0], src=jnp.asarray(b.src),
                          dst=jnp.asarray(b.dst), w=jnp.asarray(b.w, b.dtype))
+
+    def plan_arrays(self, plan: DensePlan):
+        return ({"src": np.asarray(plan.src), "dst": np.asarray(plan.dst),
+                 "w": np.asarray(plan.w)}, {"n_pad": int(plan.n_pad)})
+
+    def plan_restore(self, key: str, arrays, meta) -> DensePlan:
+        return DensePlan(key=key, backend=self.name,
+                         n_pad=int(meta["n_pad"]),
+                         src=jnp.asarray(arrays["src"]),
+                         dst=jnp.asarray(arrays["dst"]),
+                         w=jnp.asarray(arrays["w"]))
 
     def sweep(self, plan: DensePlan, b: SweepBatch):
         self._check(plan, b)
@@ -284,6 +310,28 @@ class ShardedSweepBackend(SweepBackend):
                            nb=int(shards.get("nb", 0)),
                            eargs=device_put_edge_args_cols(shards, b.dtype))
 
+    def plan_arrays(self, plan: ShardedPlan):
+        # the eargs tuple IS the layout (calling-convention order owned by
+        # device_put_edge_args_cols); the mesh is process state, rebuilt
+        # from the backend's own shared mesh at restore
+        arrays = {f"earg{i}": np.asarray(x) for i, x in enumerate(plan.eargs)}
+        return arrays, {"n_pad": int(plan.n_pad), "mode": plan.mode,
+                        "n_shards": int(plan.n_shards),
+                        "per": int(plan.per), "nb": int(plan.nb),
+                        "n_eargs": len(plan.eargs)}
+
+    def plan_restore(self, key: str, arrays, meta) -> ShardedPlan:
+        if meta["mode"] != self.mode or int(meta["n_shards"]) != self.n_shards:
+            raise ValueError("spilled plan laid out for a different "
+                             f"shard config: {meta}")
+        eargs = tuple(jnp.asarray(arrays[f"earg{i}"])
+                      for i in range(int(meta["n_eargs"])))
+        return ShardedPlan(key=key, backend=self.name,
+                           n_pad=int(meta["n_pad"]), mesh=self.mesh,
+                           mode=self.mode, n_shards=self.n_shards,
+                           per=int(meta["per"]), nb=int(meta["nb"]),
+                           eargs=eargs)
+
     def _vector_layout(self, plan: ShardedPlan, h0, ca, ch, m, dtype):
         """Per-batch device layout of the (n_pad, V) vectors.
 
@@ -380,26 +428,61 @@ class BsrSweepBackend(SweepBackend):
         return BsrPlan(
             key=key or b.structure_key(), backend=self.name, n_pad=n_pad,
             perm=perm, inv=inv,
+            perm_dev=jnp.asarray(perm), inv_dev=jnp.asarray(inv),
             lt=DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype,
                                values=w),
             lfwd=DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
                                  values=w),
             bs=bs, accum_dtype=accum)
 
+    def plan_arrays(self, plan: BsrPlan):
+        arrays = {"perm": np.asarray(plan.perm), "inv": np.asarray(plan.inv),
+                  "lt_blocks": np.asarray(plan.lt.blocks),
+                  "lt_idx": np.asarray(plan.lt.idx),
+                  "lfwd_blocks": np.asarray(plan.lfwd.blocks),
+                  "lfwd_idx": np.asarray(plan.lfwd.idx)}
+        return arrays, {"n_pad": int(plan.n_pad), "bs": int(plan.bs),
+                        "bsr_n_nodes": int(plan.lt.n_nodes),
+                        "bsr_n_pad": int(plan.lt.n_pad),
+                        "accum": str(np.dtype(plan.accum_dtype))}
+
+    def plan_restore(self, key: str, arrays, meta) -> BsrPlan:
+        bs = int(meta["bs"])
+        if bs != min(self.bs, int(meta["n_pad"])):
+            raise ValueError(f"spilled plan blocked at bs={bs}, "
+                             f"backend wants {self.bs}")
+        nn, npd = int(meta["bsr_n_nodes"]), int(meta["bsr_n_pad"])
+        lt = DeviceBSR(jnp.asarray(arrays["lt_blocks"]),
+                       jnp.asarray(arrays["lt_idx"]), bs, nn, npd)
+        lfwd = DeviceBSR(jnp.asarray(arrays["lfwd_blocks"]),
+                         jnp.asarray(arrays["lfwd_idx"]), bs, nn, npd)
+        accum = (np.dtype(meta["accum"]) if meta["accum"] == "float64"
+                 else jnp.float32)
+        perm, inv = arrays["perm"], arrays["inv"]
+        return BsrPlan(key=key, backend=self.name, n_pad=int(meta["n_pad"]),
+                       perm=perm, inv=inv, perm_dev=jnp.asarray(perm),
+                       inv_dev=jnp.asarray(inv), lt=lt, lfwd=lfwd, bs=bs,
+                       accum_dtype=accum)
+
     def sweep(self, plan: BsrPlan, b: SweepBatch):
         self._check(plan, b)
-        perm, inv = plan.perm, plan.inv
-        ca = jnp.asarray(b.ca[perm], b.dtype)
-        ch = jnp.asarray(b.ch[perm], b.dtype)
-        m = jnp.asarray(b.mask[perm], b.dtype)
-        h = jnp.asarray(b.h0[perm], b.dtype)
+        # batch vectors upload unpermuted; the blocking permutation is an
+        # on-device gather (entry) / inverse gather (exit) — no host
+        # fancy-indexing per batch (the ROADMAP on-device-permute item)
+        ca = jnp.asarray(b.ca, b.dtype)
+        ch = jnp.asarray(b.ch, b.dtype)
+        m = jnp.asarray(b.mask, b.dtype)
+        h = jnp.asarray(b.h0, b.dtype)
         if self.fused:
             h, a, conv = bsr_converge(plan.lt, plan.lfwd, h, ca, ch, m,
                                       b.tol, b.max_iter, self.interpret,
-                                      plan.accum_dtype)
-            return (np.asarray(h)[inv], np.asarray(a)[inv],
-                    np.asarray(conv))
+                                      plan.accum_dtype,
+                                      perm=plan.perm_dev, inv=plan.inv_dev)
+            return np.asarray(h), np.asarray(a), np.asarray(conv)
         # host-driven reference loop: one residual round trip per sweep
+        # (entry/exit permutation still on device, once per batch)
+        perm_d, inv_d = plan.perm_dev, plan.inv_dev
+        h, ca, ch, m = (jnp.take(x, perm_d, axis=0) for x in (h, ca, ch, m))
         v = b.h0.shape[1]
         conv = np.full(v, -1, np.int32)
         k = 0
@@ -416,7 +499,8 @@ class BsrSweepBackend(SweepBackend):
         conv = np.where(conv < 0, k, conv)
         a = bsr_matvec(plan.lt, h, ch, self.interpret, plan.accum_dtype) * m
         a = normalize_l1(a, axis=0)
-        return (np.asarray(h)[inv], np.asarray(a)[inv], conv)
+        return (np.asarray(jnp.take(h, inv_d, axis=0)),
+                np.asarray(jnp.take(a, inv_d, axis=0)), conv)
 
 
 # ------------------------------------------------------- selection/factory

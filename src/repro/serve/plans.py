@@ -103,13 +103,19 @@ class BsrPlan(SweepPlan):
     """Blocking permutation + both BSR structures for the Pallas path.
 
     ``perm``/``inv`` are the ``core.reordering.blocking_permutation`` node
-    order and its inverse; ``lt``/``lfwd`` the transpose/forward DeviceBSR
-    built in the permuted space. Per-column diagonals, masks, and start
-    vectors stay batch-side (permuted at sweep time).
+    order and its inverse (host copies, for persistence);
+    ``perm_dev``/``inv_dev`` their device-resident twins, gathered by
+    ``jnp.take`` at the convergence loop's entry/exit so the per-batch
+    vector permutation runs on device instead of as host fancy-indexing.
+    ``lt``/``lfwd`` are the transpose/forward DeviceBSR built in the
+    permuted space. Per-column diagonals, masks, and start vectors stay
+    batch-side (permuted at sweep time, on device).
     """
 
     perm: object = None  # np (n_pad,) new -> old
     inv: object = None   # np (n_pad,) old -> new
+    perm_dev: object = None  # jnp copies of perm/inv for the on-device
+    inv_dev: object = None   # entry/exit gathers
     lt: object = None    # DeviceBSR, transpose (authority half-step)
     lfwd: object = None  # DeviceBSR, forward (hub half-step)
     bs: int = 0

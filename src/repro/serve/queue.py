@@ -17,9 +17,16 @@ duplicates never consume queue depth or batch columns), and a bounded
 pending set gives natural backpressure: ``submit`` blocks once
 ``max_pending`` distinct root sets are waiting.
 
-All device work runs on the single dispatcher thread (or the caller's
-thread inside ``flush``/``close`` drains, serialized by the dispatch
-lock), so backends never see concurrent sweeps.
+Dispatch itself is the service's staged ``ServePipeline`` — the same
+assemble → plan → sweep → publish path the synchronous ``rank()`` takes.
+The queue contributes only a *job stream*: each flush decision (v_max
+width or deadline, whichever first) yields one ``PipelineJob`` whose
+``on_done`` resolves the batch's tickets at publish time. Because the
+pipeline pulls that stream from its prepare worker, at
+``pipeline_depth >= 2`` both the deadline wait and the next batch's host
+assembly overlap the previous batch's device sweep; the pipeline's sweep
+lock keeps backends from ever seeing concurrent sweeps (including
+``flush``/``close`` drains on the caller's thread).
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from ..graph.subgraph import root_set_key
+from .pipeline import PipelineJob
 
 
 class QueueTicket:
@@ -89,7 +97,6 @@ class RankQueue:
             raise ValueError("max_pending must be >= 1")
         self._cond = threading.Condition()
         self._pending: "OrderedDict[str, _Pending]" = OrderedDict()
-        self._dispatch_lock = threading.Lock()  # serializes service.rank
         self._closed = False
         self.stats = {"submitted": 0, "coalesced": 0, "batches": 0,
                       "flush_vmax": 0, "flush_deadline": 0, "flush_drain": 0,
@@ -146,13 +153,18 @@ class RankQueue:
 
     def flush(self):
         """Dispatch everything pending now (caller's thread), ignoring the
-        deadline — the drain a benchmark or shutdown wants."""
+        deadline — the drain a benchmark or shutdown wants. Runs each
+        batch depth-1 through the shared pipeline (nothing to overlap
+        with on a drain)."""
         while True:
             batch = self._take_batch()
             if not batch:
                 return
-            self.stats["flush_drain"] += 1
-            self._dispatch(batch)
+            with self._cond:
+                self.stats["flush_drain"] += 1
+            for _out in self.service.pipeline.run([self._job(batch)],
+                                                  depth=1):
+                pass
 
     def close(self, wait: bool = True):
         """Stop accepting submissions, drain what's pending, stop the
@@ -188,35 +200,61 @@ class RankQueue:
                 self._cond.notify_all()  # wake backpressured submitters
             return batch
 
-    def _dispatch(self, batch: List[_Pending]):
-        self.stats["batches"] += 1
-        self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
-        with self._dispatch_lock:
-            try:
-                results = self.service.rank([p.roots for p in batch])
-                err = None
-            except BaseException as e:  # noqa: BLE001 — forwarded to tickets
-                results, err = [None] * len(batch), e
+    def _job(self, batch: List[_Pending]) -> PipelineJob:
+        """One pipeline job for a taken batch; ``on_done`` fans results
+        (or the failure) out to every waiting ticket at publish time."""
+        return PipelineJob(queries=[p.roots for p in batch], tag=batch,
+                           on_done=self._resolve_job)
+
+    def _resolve_job(self, job: PipelineJob, results, exc):
+        batch = job.tag
+        with self._cond:
+            self.stats["batches"] += 1
+            self.stats["max_batch"] = max(self.stats["max_batch"],
+                                          len(batch))
+        if results is None:
+            results = [None] * len(batch)
         for p, r in zip(batch, results):
             for t in p.tickets:
-                t._resolve(r, err)
+                t._resolve(r, exc)
 
-    def _loop(self):
+    def _job_stream(self):
+        """The dispatcher's job source: block until a flush criterion —
+        v_max distinct pending, the oldest's deadline, or closure — then
+        take a batch and yield its job.
+
+        The pipeline pulls this generator from its prepare worker, so at
+        depth >= 2 the wait itself runs while the previous batch sweeps
+        on the driving thread.
+        """
         while True:
             with self._cond:
-                while not self._pending and not self._closed:
-                    self._cond.wait()
-                if self._closed and not self._pending:
-                    return
-                n = len(self._pending)
-                oldest = next(iter(self._pending.values())).submitted_at
-                wait_s = oldest + self.deadline_s - time.perf_counter()
-                if n < self.v_max and wait_s > 0 and not self._closed:
-                    self._cond.wait(wait_s)
-                    continue  # re-evaluate: more arrivals or deadline hit
-                reason = ("flush_vmax" if n >= self.v_max
-                          else "flush_deadline")
+                while True:
+                    if self._pending:
+                        n = len(self._pending)
+                        oldest = next(
+                            iter(self._pending.values())).submitted_at
+                        wait_s = (oldest + self.deadline_s
+                                  - time.perf_counter())
+                        if n >= self.v_max:
+                            reason = "flush_vmax"
+                            break
+                        if self._closed or wait_s <= 0:
+                            reason = "flush_deadline"
+                            break
+                        self._cond.wait(wait_s)
+                    elif self._closed:
+                        return
+                    else:
+                        self._cond.wait()
             batch = self._take_batch()
             if batch:
-                self.stats[reason] += 1
-                self._dispatch(batch)
+                with self._cond:
+                    self.stats[reason] += 1
+                yield self._job(batch)
+
+    def _loop(self):
+        # drive the job stream through the service's staged pipeline;
+        # ticket resolution happens inside publish via on_done
+        for _out in self.service.pipeline.run(self._job_stream()):
+            pass

@@ -25,19 +25,25 @@ The convergence loop itself is pluggable (see ``serve.backends``): the
 ``dense`` single-device path, the mesh-``sharded`` path over the
 ``sparse.dist`` edge-sharding ladder, and the Pallas ``bsr`` block-sparse
 path all consume the same padded batch and match each other to <=1e-10 L1.
+
+Execution is staged (see ``serve.pipeline``): every batch — whether it
+came from this synchronous ``rank()`` or from the queued frontend — runs
+assemble → plan → sweep → publish through one ``ServePipeline``, which at
+``pipeline_depth >= 2`` overlaps the next batch's host work with the
+current batch's device sweep.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.weights import accel_weights
-from ..graph.structure import Graph, next_pow2
-from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor, root_set_key
+from ..graph.structure import Graph
+from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor
 from .backends import SweepBackend, SweepBatch, make_backend, select_backend
 from .plans import PlanCache, SweepPlan
 
@@ -62,6 +68,11 @@ class RankServiceConfig:
     # layouts (edge shards, BSR blockings, device edge lists) so repeat
     # root sets skip host-side rebuilds; <= 0 disables
     plan_cache_size: int = 64
+    # staged dispatch pipeline (serve.pipeline.ServePipeline): number of
+    # batches in flight. 1 = serial (assemble(j) sees publish(j-1));
+    # >= 2 overlaps batch j's host assemble/plan with batch j-1's device
+    # sweep (assemble(j) deterministically sees publish(j-depth))
+    pipeline_depth: int = 2
     # async micro-batching frontend (serve.queue.RankQueue / .queue()):
     deadline_ms: float = 5.0   # max extra latency batching may add
     queue_depth: Optional[int] = None  # max distinct pending (None: 4*v_max)
@@ -128,15 +139,26 @@ class RankService:
         # last converged scores per global node — the warm-start table
         self._warm_h = np.zeros(g.n_nodes)
         self._warm_seen = np.zeros(g.n_nodes, bool)
+        # guards every mutable serving structure (stats, vector cache,
+        # warm table, plan cache): pipeline stages read/write them from
+        # the prepare worker and the driving thread concurrently
+        self._lock = threading.RLock()
         self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
                       "cold": 0, "sweeps": 0, "backend_batches": {},
                       "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
+                      "plan_restored": 0, "plan_spilled": 0,
                       "spill_writes": 0, "spill_hits": 0, "spill_restored": 0}
         self._spill = None
+        self._plan_spill = None
+        self._spill_pending: list = []  # deferred writes (see _drain_spill)
+        self._spill_io_lock = threading.Lock()  # serializes disk writes
         if self.cfg.spill_dir is not None:
-            from .spill import CacheSpill
+            from .spill import CacheSpill, PlanSpill
             self._spill = CacheSpill(self.cfg.spill_dir)
+            self._plan_spill = PlanSpill(self.cfg.spill_dir)
             self._restore_spilled()
+        from .pipeline import ServePipeline
+        self.pipeline = ServePipeline(self, depth=self.cfg.pipeline_depth)
 
     def queue(self, **kw):
         """An async micro-batching frontend over this service (the config's
@@ -182,35 +204,94 @@ class RankService:
         overlapping root sets that induce the same union subgraph skip all
         host-side layout rebuilding (edge shards, BSR blocking, device
         transfer).
+
+        With a ``spill_dir``, plans also persist next to the vector spill
+        (``serve.spill.PlanSpill``): a cache miss tries the disk copy
+        before rebuilding, so a restarted service skips layout rebuilds
+        too (``plan_restored``), and every built plan is written through
+        (``plan_spilled``).
         """
         skey = batch.structure_key()
         key = (backend.name, backend.plan_params(), skey)
-        plan = self._plans.get(key)
-        if plan is None:
-            plan = backend.plan(batch, skey)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.stats["plan_hits"] += 1
+                return plan
+        if self._plan_spill is not None:  # disk before rebuild (restart)
+            plan = self._restore_plan(backend, key, skey)
+            if plan is not None:
+                with self._lock:
+                    self._plans.put(key, plan)
+                    self.stats["plan_restored"] += 1
+                    self.stats["plan_evictions"] = \
+                        self._plans.stats["evictions"]
+                return plan
+        plan = backend.plan(batch, skey)
+        with self._lock:
             self._plans.put(key, plan)
             self.stats["plan_misses"] += 1
-        else:
-            self.stats["plan_hits"] += 1
-        self.stats["plan_evictions"] = self._plans.stats["evictions"]
+            self.stats["plan_evictions"] = self._plans.stats["evictions"]
+        if self._plan_spill is not None:
+            # durability write-through is strictly optional: a full disk
+            # or unserializable backend must not fail a batch whose plan
+            # is already built and cached
+            try:
+                arrays, meta = backend.plan_arrays(plan)
+                with self._spill_io_lock:  # concurrent same-key builds
+                    self._plan_spill.put(key, arrays, meta)
+                with self._lock:
+                    self.stats["plan_spilled"] += 1
+            except (NotImplementedError, OSError, ValueError, TypeError):
+                pass  # TypeError: json-unserializable meta from a backend
         return plan
 
-    # -- cache ------------------------------------------------------------
+    def _restore_plan(self, backend: SweepBackend, key: tuple,
+                      skey: str) -> Optional[SweepPlan]:
+        """A spilled plan for this cache key, rehydrated — or None (absent,
+        foreign, corrupt, or mismatched layout params: never crash the
+        serving path over a bad disk record, just rebuild)."""
+        rec = self._plan_spill.get(key)
+        if rec is None:
+            return None
+        try:
+            return backend.plan_restore(skey, *rec)
+        except (NotImplementedError, KeyError, ValueError, TypeError):
+            return None
 
-    def _cache_get(self, key: str) -> Optional[_CacheEntry]:
+    # -- cache ------------------------------------------------------------
+    # Disk traffic (spill reads and writes) deliberately lives OUTSIDE the
+    # service lock: the pipeline's assemble stage probes the spill after
+    # releasing it, and writes queue in ``_spill_pending`` for
+    # ``_drain_spill`` — otherwise every checkpoint write would serialize
+    # the prepare worker against the publishing thread and erase the
+    # host/device overlap the pipeline exists for.
+
+    def _cache_get_mem(self, key: str) -> Optional[_CacheEntry]:
+        """In-memory LRU probe only (caller holds the lock). The spill
+        fallback for misses is the assemble stage's job, off the lock."""
         e = self._cache.get(key)
         if e is not None:
             self._cache.move_to_end(key)
-            return e
-        if self._spill is not None:  # fall back to spilled (evicted/restart)
-            e = self._entry_from_spill(self._spill.get(key))
-            if e is not None:
-                self.stats["spill_hits"] += 1
-                self._admit(key, e)  # back in the LRU, no rewrite to disk
-                self._warm_h[e.nodes] = e.hub
-                self._warm_seen[e.nodes] = True
-                return e
-        return None
+        return e
+
+    def _admit_spilled(self, key: str, d) -> Optional[_CacheEntry]:
+        """Admit a record read back from the spill (caller holds the lock;
+        the disk read already happened): validate, count the disk hit,
+        restore LRU + warm-table state. No rewrite to disk."""
+        live = self._cache_get_mem(key)
+        if live is not None:
+            # a concurrent run converged this key in the window since the
+            # memory probe — the live entry is fresher than the disk one
+            return live
+        e = self._entry_from_spill(d)
+        if e is None:
+            return None
+        self.stats["spill_hits"] += 1
+        self._admit(key, e)
+        self._warm_h[e.nodes] = e.hub
+        self._warm_seen[e.nodes] = True
+        return e
 
     def _entry_from_spill(self, d) -> Optional[_CacheEntry]:
         """Validate a spilled record (a spill dir pointed at the wrong
@@ -226,21 +307,50 @@ class RankService:
                            hub=d["hub"])
 
     def _admit(self, key: str, e: _CacheEntry):
-        """LRU insert + eviction (spilling evictees keeps them servable)."""
+        """LRU insert + eviction (spilling evictees keeps them servable;
+        the disk write is deferred to ``_drain_spill``)."""
         self._cache[key] = e
         self._cache.move_to_end(key)
         while len(self._cache) > self.cfg.cache_size:
             old_key, old = self._cache.popitem(last=False)
             # under "all" every converged entry was spilled at _cache_put
             if self._spill is not None and self.cfg.spill_policy == "evict":
-                self._spill.put(old_key, old.nodes, old.authority, old.hub)
-                self.stats["spill_writes"] += 1
+                self._spill_pending.append((old_key, old.nodes,
+                                            old.authority, old.hub))
 
     def _cache_put(self, key: str, e: _CacheEntry):
         if self._spill is not None and self.cfg.spill_policy == "all":
-            self._spill.put(key, e.nodes, e.authority, e.hub)
-            self.stats["spill_writes"] += 1
+            self._spill_pending.append((key, e.nodes, e.authority, e.hub))
         self._admit(key, e)
+
+    def _drain_spill(self):
+        """Flush deferred spill writes to disk, OUTSIDE the service lock
+        (pipeline stages call this after releasing it; the slow half of
+        spilling must not block the other thread's cache probes).
+
+        Writes are serialized by the spill IO lock — concurrent runs (a
+        sync ``rank`` beside the queue dispatcher) could otherwise race
+        ``checkpoint.save`` on the same key's generation — and are
+        best-effort: durability failures (disk full, permissions) must
+        never fail a batch whose results are already in memory.
+        """
+        if self._spill is None:
+            return
+        with self._lock:
+            pending, self._spill_pending = self._spill_pending, []
+        if not pending:
+            return  # don't queue behind another thread's writes for a no-op
+        written = 0
+        with self._spill_io_lock:
+            for key, nodes, authority, hub in pending:
+                try:
+                    self._spill.put(key, nodes, authority, hub)
+                    written += 1
+                except (OSError, ValueError):
+                    pass
+        if written:
+            with self._lock:
+                self.stats["spill_writes"] += written
 
     def _restore_spilled(self):
         """Repopulate the LRU (newest-spilled most recent) and the global
@@ -263,18 +373,39 @@ class RankService:
         disk)."""
         if self._spill is None:
             raise ValueError("no spill_dir configured")
-        for key, e in self._cache.items():
-            self._spill.put(key, e.nodes, e.authority, e.hub)
-            self.stats["spill_writes"] += 1
+        self._drain_spill()  # deferred evictee writes aren't in the LRU
+        with self._lock:
+            entries = [(k, e.nodes, e.authority, e.hub)
+                       for k, e in self._cache.items()]
+        with self._spill_io_lock:
+            for key, nodes, authority, hub in entries:
+                self._spill.put(key, nodes, authority, hub)
+        with self._lock:
+            self.stats["spill_writes"] += len(entries)
 
     def clear_result_cache(self):
         """Drop all converged-vector state (LRU entries + the warm-start
         table) while KEEPING cached plans — the bench's warm-plan /
         cold-vector leg, and a memory valve for long-lived services.
         Spilled entries on disk are untouched."""
-        self._cache.clear()
-        self._warm_h[:] = 0.0
-        self._warm_seen[:] = False
+        with self._lock:
+            self._cache.clear()
+            self._warm_h[:] = 0.0
+            self._warm_seen[:] = False
+
+    def snapshot_stats(self) -> dict:
+        """A consistent copy of the stats counters.
+
+        The live ``stats`` dict is mutated under the service lock by
+        pipeline stages running on the prepare worker and the driving
+        thread; client threads (e.g. monitoring loops over a busy
+        ``RankQueue``) should read through this accessor instead of
+        iterating the live dict mid-update.
+        """
+        with self._lock:
+            out = dict(self.stats)
+            out["backend_batches"] = dict(self.stats["backend_batches"])
+            return out
 
     # -- serving ----------------------------------------------------------
 
@@ -294,105 +425,29 @@ class RankService:
     def rank(self, queries: Sequence[Sequence[int]], *,
              refresh: bool = False) -> List[QueryResult]:
         """Rank a list of root sets. Chunks of ``v_max`` queries share one
-        traversal. ``refresh`` re-iterates exact cache hits (warm-started)
-        instead of serving the stored scores."""
+        traversal; multi-chunk streams execute through the staged pipeline
+        (``serve.pipeline``), overlapping each chunk's host assembly with
+        the previous chunk's device sweep at ``pipeline_depth >= 2``.
+        ``refresh`` re-iterates exact cache hits (warm-started) instead of
+        serving the stored scores."""
+        from .pipeline import PipelineJob
+
         # validate everything before serving anything: a mid-batch raise
         # would lose computed results and corrupt the stats counters
         clean = [self.validate_roots(roots) for roots in queries]
-        out: List[QueryResult] = []
         v = self.cfg.v_max
-        for i in range(0, len(clean), v):
-            out.extend(self._rank_batch(clean[i:i + v], refresh))
+        jobs = [PipelineJob(queries=clean[i:i + v], refresh=refresh)
+                for i in range(0, len(clean), v)]
+        out: List[QueryResult] = []
+        gen = self.pipeline.run(jobs)
+        try:
+            for _job, results, exc in gen:
+                if exc is not None:
+                    raise exc
+                out.extend(results)
+        finally:
+            gen.close()  # unwind the prepare worker if we raised mid-run
         return out
-
-    def _rank_batch(self, queries, refresh: bool) -> List[QueryResult]:
-        self.stats["batches"] += 1
-        self.stats["queries"] += len(queries)
-        results: List[Optional[QueryResult]] = [None] * len(queries)
-
-        # cache hits are served without touching the device; identical
-        # uncached root sets in one chunk share a single column
-        todo = []  # (slot, FocusedSubgraph, warm_entry|None)
-        dup_of = {}  # key -> slot of the column that computes it
-        dups = []  # (slot, owner_slot)
-        for slot, roots_u in enumerate(queries):
-            key = root_set_key(roots_u)
-            entry = self._cache_get(key)
-            if entry is not None and not refresh:
-                self.stats["hit"] += 1
-                results[slot] = QueryResult(
-                    roots=roots_u, nodes=entry.nodes,
-                    authority=entry.authority, hub=entry.hub,
-                    iters=0, status="hit", key=key)
-                continue
-            if key in dup_of:
-                dups.append((slot, dup_of[key]))
-                continue
-            dup_of[key] = slot
-            todo.append((slot, self.extractor.extract(roots_u), entry))
-        if not todo:
-            return results  # all hits
-
-        subs = [t[1] for t in todo]
-        union = self.extractor.extract_union(subs)
-        nodes_u = union.nodes
-        n_u, e_u = len(nodes_u), union.graph.n_edges
-        n_pad = next_pow2(max(n_u + 1, 16))  # +1: a guaranteed-dead pad row
-        e_pad = next_pow2(max(e_u, 16))
-        V = self.cfg.v_max
-
-        src = np.full(e_pad, n_pad - 1, np.int32)
-        dst = np.full(e_pad, n_pad - 1, np.int32)
-        w = np.zeros(e_pad)
-        src[:e_u] = union.graph.src
-        dst[:e_u] = union.graph.dst
-        w[:e_u] = 1.0
-
-        ca = np.zeros((n_pad, V))
-        ch = np.zeros((n_pad, V))
-        mask = np.zeros((n_pad, V))
-        h0 = np.zeros((n_pad, V))
-        statuses = [""] * len(todo)
-        for j, (_slot, fs, entry) in enumerate(todo):
-            loc = np.searchsorted(nodes_u, fs.nodes)      # S_j in union ids
-            m = np.zeros(n_u, bool)
-            m[loc] = True
-            # induced degrees of S_j (edges with both endpoints in S_j)
-            sel = m[union.graph.src] & m[union.graph.dst]
-            indeg = np.bincount(union.graph.dst[sel], minlength=n_u)
-            outdeg = np.bincount(union.graph.src[sel], minlength=n_u)
-            ca_j, ch_j = accel_weights(indeg, outdeg)
-            ca[:n_u, j] = ca_j * m
-            ch[:n_u, j] = ch_j * m
-            mask[:n_u, j] = m
-            h0[:n_u, j], statuses[j] = self._start_vector(fs, entry, m, loc)
-            self.stats[statuses[j]] += 1
-
-        backend = self._backend_for(n_u, e_u)
-        batch = SweepBatch(
-            h0=h0, src=src, dst=dst, w=w, ca=ca, ch=ch, mask=mask,
-            tol=self.cfg.tol, max_iter=self.cfg.max_iter,
-            dtype=self._dtype)
-        h, a, conv = backend.sweep(self._plan_for(backend, batch), batch)
-        self.stats["sweeps"] += int(conv.max(initial=0))
-        bb = self.stats["backend_batches"]
-        bb[backend.name] = bb.get(backend.name, 0) + 1
-
-        for j, (slot, fs, _entry) in enumerate(todo):
-            loc = np.searchsorted(nodes_u, fs.nodes)
-            auth_j, hub_j = a[loc, j], h[loc, j]
-            entry = _CacheEntry(nodes=fs.nodes, authority=auth_j, hub=hub_j)
-            self._cache_put(fs.key, entry)
-            self._warm_h[fs.nodes] = hub_j
-            self._warm_seen[fs.nodes] = True
-            results[slot] = QueryResult(
-                roots=fs.nodes[fs.roots_local], nodes=fs.nodes,
-                authority=auth_j, hub=hub_j, iters=int(conv[j]),
-                status=statuses[j], key=fs.key)
-        for slot, owner in dups:  # identical root sets share the column
-            results[slot] = results[owner]
-            self.stats[results[owner].status] += 1
-        return results
 
     def _start_vector(self, fs: FocusedSubgraph, entry, m: np.ndarray,
                       loc: np.ndarray):

@@ -13,15 +13,27 @@ Layout: ``<spill_dir>/<root-set-hash>/step_<gen>/{arrays.npz,manifest.json}``
 — each cache entry is its own tiny checkpoint stream; refreshes bump the
 generation and prune the old one, and a crash mid-write never corrupts the
 previously-spilled generation (the checkpoint module's invariant).
+
+``PlanSpill`` gives ``SweepPlan`` layouts the same treatment under
+``<spill_dir>/plans/`` — a restarted service skips layout rebuilds the
+way the vector spill lets it skip re-convergence.
 """
 from __future__ import annotations
 
+import hashlib
 import os
+import zipfile
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from .. import checkpoint
+
+# what a missing/truncated/corrupt/foreign checkpoint stream can raise on
+# read — np.load throws BadZipFile when a damaged .npz still carries the
+# zip magic; every reader here treats all of these as "entry absent"
+_READ_ERRORS = (FileNotFoundError, OSError, KeyError, ValueError,
+                zipfile.BadZipFile, EOFError)
 
 # spill entries are flat {name: array} trees; checkpoint flattens dict
 # keys as "k=<name>"
@@ -55,7 +67,7 @@ class CacheSpill:
         entry_dir = os.path.join(self.dir, key)
         try:
             arrays, _step, _extra = checkpoint.restore_arrays(entry_dir)
-        except (FileNotFoundError, OSError, KeyError, ValueError):
+        except _READ_ERRORS:
             return None
         try:
             return {f: arrays[f"k={f}"] for f in _FIELDS}
@@ -103,3 +115,71 @@ class CacheSpill:
             e = self.get(key)
             if e is not None:
                 yield key, e
+
+
+class PlanSpill:
+    """Persist ``SweepPlan`` layouts next to the vector spill.
+
+    The vector spill makes converged *scores* survive a restart; this
+    makes the structural *layouts* (edge shards, BSR blockings, device
+    edge lists) survive too, so a restarted service skips the host-side
+    rebuild the plan cache exists to avoid (the ROADMAP persist-plans
+    item). One checkpoint stream per plan-cache key under
+    ``<spill_dir>/plans/<sha1 of the key>/step_<gen>``; arrays come from
+    ``SweepBackend.plan_arrays`` and rehydrate through ``plan_restore``.
+
+    The full cache key — ``(backend, plan_params, structure_key)`` — is
+    stored in the manifest and verified on read, so a foreign or
+    hash-colliding record is rejected rather than rehydrated. Records
+    also carry a format version: bump ``FORMAT`` whenever any backend's
+    ``plan_arrays`` schema (or a device structure it serializes, like
+    DeviceBSR's layout) changes meaning, and every stale record reads as
+    absent instead of rehydrating into a silently wrong sweep.
+    """
+
+    FORMAT = 1
+
+    def __init__(self, spill_dir: str):
+        self.dir = os.path.join(spill_dir, "plans")
+        os.makedirs(self.dir, exist_ok=True)
+
+    @staticmethod
+    def _name(cache_key: tuple) -> str:
+        return hashlib.sha1(repr(cache_key).encode()).hexdigest()
+
+    def put(self, cache_key: tuple, arrays: Dict[str, np.ndarray],
+            meta: dict) -> str:
+        entry_dir = os.path.join(self.dir, self._name(cache_key))
+        gen = (checkpoint.latest_step(entry_dir) or 0) + 1
+        path = checkpoint.save(
+            entry_dir, gen, {k: np.asarray(v) for k, v in arrays.items()},
+            extra={"cache_key": repr(cache_key), "meta": meta,
+                   "format": self.FORMAT})
+        checkpoint.prune(entry_dir, keep=1)
+        return path
+
+    def get(self, cache_key: tuple
+            ) -> Optional[Tuple[Dict[str, np.ndarray], dict]]:
+        """(arrays, meta) for the key, or None (absent/foreign/corrupt)."""
+        entry_dir = os.path.join(self.dir, self._name(cache_key))
+        try:
+            arrays, _step, extra = checkpoint.restore_arrays(entry_dir)
+        except _READ_ERRORS:
+            return None
+        if extra.get("cache_key") != repr(cache_key) \
+                or extra.get("format") != self.FORMAT:
+            return None
+        # checkpoint flattens dict keys as "k=<name>"
+        out = {k[2:]: v for k, v in arrays.items() if k.startswith("k=")}
+        return out, extra.get("meta", {})
+
+    def __contains__(self, cache_key: tuple) -> bool:
+        return checkpoint.latest_step(
+            os.path.join(self.dir, self._name(cache_key))) is not None
+
+    def __len__(self) -> int:
+        if not os.path.isdir(self.dir):
+            return 0
+        return sum(1 for n in os.listdir(self.dir)
+                   if checkpoint.latest_step(
+                       os.path.join(self.dir, n)) is not None)

@@ -102,7 +102,9 @@ def test_entries_from_wrong_graph_rejected(tmp_path, g):
     sp.put(key, np.array([g.n_nodes + 5], np.int32), np.ones(1), np.ones(1))
     svc = svc_for(g, tmp_path)
     assert svc.stats["spill_restored"] == 0
-    assert svc._cache_get(key) is None  # miss-path fallback rejects too
+    # the assemble stage's miss-path fallback rejects it too
+    assert svc._admit_spilled(key, svc._spill.get(key)) is None
+    assert svc.stats["spill_hits"] == 0
 
 
 # ---------------------------------------------- RankService spill behavior
@@ -165,6 +167,88 @@ def test_restart_same_process_restores_cache_and_warm_table(tmp_path, g,
     r = svc2.rank([overlap])[0]
     assert r.key != root_set_key(queries[0])
     assert r.status == "warm"
+
+
+# ----------------------------------------------- plan spill (ISSUE 5)
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr", "sharded"])
+def test_plan_spill_restart_skips_layout_rebuild(tmp_path, g, queries,
+                                                 backend):
+    """Plans persist next to the vector spill: a fresh service on the same
+    spill dir re-sweeps (refresh) through disk-restored plans — zero
+    layout rebuilds (plan_misses == 0) and scores <=1e-10 of a spill-free
+    reference."""
+    ref = RankService(g, RankServiceConfig(
+        v_max=4, tol=TOL, backend=backend, shard_devices=1)).rank(queries)
+    svc1 = svc_for(g, tmp_path, backend=backend, shard_devices=1)
+    svc1.rank(queries)
+    assert svc1.stats["plan_spilled"] == svc1.stats["plan_misses"] >= 1
+    del svc1
+
+    svc2 = svc_for(g, tmp_path, backend=backend, shard_devices=1)
+    res = svc2.rank(queries, refresh=True)  # force re-sweeps through plans
+    assert svc2.stats["plan_restored"] >= 1, svc2.stats
+    assert svc2.stats["plan_misses"] == 0, svc2.stats
+    for a, b in zip(res, ref):
+        assert (a.nodes == b.nodes).all()
+        assert np.abs(a.authority - b.authority).sum() <= 1e-10
+    # second pass in the same process: the restored plans are now cached
+    svc2.rank(queries, refresh=True)
+    assert svc2.stats["plan_hits"] >= 1
+
+
+def test_corrupt_plan_spill_rebuilds_instead_of_crashing(tmp_path, g,
+                                                         queries):
+    """Garbage under <spill_dir>/plans must never take the serving path
+    down — a bad record is treated as a miss and the plan rebuilds."""
+    svc1 = svc_for(g, tmp_path)
+    svc1.rank(queries[:2])
+    plans_dir = os.path.join(str(tmp_path), "plans")
+    names = os.listdir(plans_dir)
+    assert names
+    # two corruption modes: plain garbage (ValueError from np.load) and a
+    # truncated-but-zip-magic file (zipfile.BadZipFile) — both must read
+    # as "absent"
+    payloads = [b"not an npz", b"PK\x03\x04truncated-zip-header"]
+    for i, name in enumerate(names):  # clobber every spilled plan's arrays
+        step = sorted(os.listdir(os.path.join(plans_dir, name)))[-1]
+        with open(os.path.join(plans_dir, name, step, "arrays.npz"),
+                  "wb") as f:
+            f.write(payloads[i % len(payloads)])
+    svc2 = svc_for(g, tmp_path)
+    res = svc2.rank(queries[:2], refresh=True)
+    assert svc2.stats["plan_restored"] == 0
+    assert svc2.stats["plan_misses"] >= 1  # rebuilt, served fine
+    assert all(r.status in ("warm", "cold") for r in res)
+
+
+def test_plan_spill_key_mismatch_rejected(tmp_path):
+    """A PlanSpill record is only served for the exact cache key it was
+    written under (manifest-verified), so a foreign record at the same
+    path hash can't rehydrate."""
+    from repro.serve import PlanSpill
+
+    ps = PlanSpill(str(tmp_path))
+    key = ("dense", (), "a" * 40)
+    ps.put(key, {"src": np.arange(4, dtype=np.int32)}, {"n_pad": 8})
+    arrays, meta = ps.get(key)
+    assert np.array_equal(arrays["src"], np.arange(4)) \
+        and meta["n_pad"] == 8
+    assert key in ps and len(ps) == 1
+    assert ps.get(("dense", (), "b" * 40)) is None
+    # forge a record whose manifest key disagrees with its path
+    other = ("bsr", (128,), "c" * 40)
+    ps.put(other, {"x": np.zeros(1)}, {})
+    entry_dir = os.path.join(str(tmp_path), "plans", ps._name(other))
+    step = sorted(os.listdir(entry_dir))[-1]
+    man = os.path.join(entry_dir, step, "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    m["extra"]["cache_key"] = repr(("tampered",))
+    with open(man, "w") as f:
+        json.dump(m, f)
+    assert ps.get(other) is None
 
 
 # ----------------------------------------- cross-process restart (ISSUE 3)
