@@ -20,7 +20,12 @@ adds the overlap axis: the same multi-batch stream dispatched serially
 (pipeline depth 1) vs pipelined (depth 2 — host assemble/plan of batch
 k+1 overlaps batch k's device sweep), as a sync stream and a queued
 burst; pipelined must match serial <=1e-10 L1 (armed in --smoke) and beat
-it on q/s in full runs.
+it on q/s in full runs. ISSUE 6 adds the rank-stability axis (residual
+vs top-k-stable stopping on Peserico-Pretto slow-rank gadgets — the
+early-exit leg must cut mean sweeps >= 2x at identical top-k) and the
+overload axis (the same mixed-priority storm through a shed-nothing
+"collapse" queue vs the SLA queue — shedding plus early exit must hold
+the high-priority p95 where collapse lets it balloon).
 
 ``--smoke`` shrinks everything to a seconds-scale CI tripwire (tiny graph,
 few queries, perf gates skipped — correctness gates still enforced).
@@ -216,6 +221,118 @@ def arrival_axis(g, cfg, queries, rates, deadline_ms):
     return rows, parity_l1
 
 
+def slow_rank_gadgets(n_gadgets, big=12):
+    """Peserico & Pretto's slow-rank regime as a serving workload.
+
+    Each gadget is two node-disjoint complete digraphs K_big and
+    K_{big-1}: the secondary/principal eigenvalue ratio is
+    ((big-2)/(big-1))**2, so the *scores* converge slowly (~145 sweeps at
+    tol 1e-12 for big=12) while the *ranking* — every K_big node above
+    every K_{big-1} node, ties broken by index — locks after one sweep.
+    Gadgets are disjoint and each query roots into its own gadget, so no
+    cache hit or warm-start crossover clouds the iteration counts.
+
+    Returns (graph, [roots per gadget]).
+    """
+    from repro.graph.structure import Graph
+
+    per = 2 * big - 1
+    src, dst, queries = [], [], []
+    for gi in range(n_gadgets):
+        base = gi * per
+        for size, off in ((big, 0), (big - 1, big)):
+            i = np.arange(size)
+            s, d = np.repeat(i, size), np.tile(i, size)
+            keep = s != d
+            src.append(base + off + s[keep])
+            dst.append(base + off + d[keep])
+        queries.append(np.array([base, base + big]))
+    g = Graph(n_gadgets * per, np.concatenate(src), np.concatenate(dst))
+    return g, queries
+
+
+def _gadget_cfg(rank_k, **kw):
+    # caps wide enough to pull a whole 23-node gadget into the base set;
+    # dense backend: the admission/stopping axes are backend-agnostic
+    # (cross-backend stopping parity is pinned by tests, not re-timed here)
+    kw.setdefault("v_max", 4)
+    kw.setdefault("tol", 1e-12)
+    kw.setdefault("backend", "dense")
+    return RankServiceConfig(out_cap=64, in_cap=64, rank_k=rank_k, **kw)
+
+
+def early_exit_axis(rank_k, stable_sweeps=2, n_gadgets=8):
+    """Residual-only vs rank-stability stopping on the slow-rank gadgets
+    (ISSUE 6 tentpole acceptance): same queries, same backend; the rank_k
+    leg must cut mean sweeps >= 2x and return the identical top-k.
+
+    Returns (mean sweeps exact, mean sweeps early-exit, topk identical).
+    """
+    g, queries = slow_rank_gadgets(n_gadgets)
+    res = {}
+    for k in (0, rank_k):
+        cfg = _gadget_cfg(k, stable_sweeps=stable_sweeps)
+        RankService(g, cfg).rank(queries)  # compile warmup
+        res[k] = RankService(g, cfg).rank(queries)
+    it_exact = float(np.mean([r.iters for r in res[0]]))
+    it_rank = float(np.mean([r.iters for r in res[rank_k]]))
+    topk_same = all(
+        [n for n, _ in a.topk(rank_k)] == [n for n, _ in b.topk(rank_k)]
+        for a, b in zip(res[0], res[rank_k]))
+    return it_exact, it_rank, topk_same
+
+
+def overload_axis(rank_k, deadline_ms, n_gadgets=24, max_pending=8):
+    """SLA admission under overload: one back-to-back storm (every 3rd
+    request high priority, the rest best-effort), served twice.
+
+    The *collapse* leg is the pre-SLA queue — nothing sheddable
+    (shed_priority above every class), exact-residual stopping — so every
+    request backpressure-blocks behind full slow-rank batches and the
+    high-priority p95 collapses with the rest. The *sla* leg sheds
+    best-effort traffic at admission, degrades rank_k under backlog, and
+    early-exits rank-stable columns; its high-priority p95 must beat the
+    collapse leg's while every shed ticket resolves during the storm.
+
+    Returns {leg: {p95_hi_ms, qps, stats, shed_prompt}}.
+    """
+    g, queries = slow_rank_gadgets(n_gadgets)
+    prios = [0 if i % 3 == 0 else 1 for i in range(len(queries))]
+    out = {}
+    for leg, k, shed_pri in (("collapse", 0, 10 ** 9), ("sla", rank_k, 1)):
+        # warm every shape the storm can dispatch: union n_pad/e_pad
+        # buckets for batch widths 1..v_max (disjoint query slices — a
+        # repeated slice is a cache hit and sweeps nothing, leaving the
+        # multi-gadget shapes uncompiled), plus the degraded-rank_k
+        # recompile the SLA leg triggers under backlog (rank_k is a
+        # static jit arg)
+        for warm_k in ({k, max(1, k // 2)} if k else {0}):
+            w = RankService(g, _gadget_cfg(warm_k))
+            i0 = 0
+            for width in range(1, w.cfg.v_max + 1):
+                w.rank(queries[i0:i0 + width])
+                i0 += width
+        svc = RankService(g, _gadget_cfg(k, shed_priority=shed_pri))
+        t0 = time.perf_counter()
+        with svc.queue(deadline_ms=deadline_ms,
+                       max_pending=max_pending) as rq:
+            tickets = [rq.submit(q, priority=p, deadline_ms=deadline_ms)
+                       for q, p in zip(queries, prios)]
+            # shed tickets must resolve *at admission* — snapshot before
+            # blocking on the served ones
+            done_at_storm_end = [t.done() for t in tickets]
+            results = [t.result(timeout=600) for t in tickets]
+        span = time.perf_counter() - t0
+        shed_prompt = all(done for r, done in zip(results, done_at_storm_end)
+                          if r.status == "shed")
+        hi = [t.latency_s * 1e3 for t, p in zip(tickets, prios) if p == 0]
+        out[leg] = {"p95_hi_ms": float(np.percentile(hi, 95)),
+                    "qps": len(queries) / span,
+                    "stats": rq.snapshot_stats(),
+                    "shed_prompt": shed_prompt}
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-nodes", type=int, default=10000)
@@ -236,6 +353,11 @@ def main():
                          "back-to-back) for the sync-vs-queued axis")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
                     help="queue flush deadline for the arrival axis")
+    ap.add_argument("--rank-k", type=int, default=4,
+                    help="top-k width for the rank-stability early-exit "
+                         "and overload axes")
+    ap.add_argument("--gadgets", type=int, default=24,
+                    help="slow-rank gadget count for the overload axis")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI tripwire: tiny graph, few "
                          "queries, perf gates skipped")
@@ -346,6 +468,23 @@ def main():
               f"sync_qps={s_qps:.1f} queued_qps={q_qps:.1f} "
               f"overlapped={overlaps}")
 
+    # --- rank-stability axis: residual vs top-k-stable stopping on the
+    # slow-rank gadgets (ISSUE 6; deterministic, armed in --smoke)
+    it_exact, it_rank, topk_same = early_exit_axis(args.rank_k)
+    print(f"serve/early_exit,0,mean_sweeps exact={it_exact:.1f} "
+          f"rank_k{args.rank_k}={it_rank:.1f} "
+          f"({it_exact / max(it_rank, 1e-9):.1f}x fewer)")
+
+    # --- overload axis: the same mixed-priority storm through the
+    # collapse queue vs the SLA queue (ISSUE 6; armed in --smoke)
+    over = overload_axis(args.rank_k, args.deadline_ms, args.gadgets)
+    for leg, row in over.items():
+        s = row["stats"]
+        print(f"serve/overload_{leg},0,p95_hi={row['p95_hi_ms']:.1f}ms "
+              f"qps={row['qps']:.1f} shed={s['shed']} "
+              f"(evicted {s['shed_evicted']}) degraded={s['degraded']} "
+              f"deadline_miss={s['deadline_miss']}")
+
     # --- plan-hit-rate axis: cold-plan vs warm-plan latency per backend
     # (repeat traffic, cold vector cache — isolates the layout rebuild)
     plan_rows = plan_axis(g, cfg, queries, ("dense", "sharded", "bsr"))
@@ -420,9 +559,37 @@ def main():
           f"{('PASS' if ok_pipe_speed else 'FAIL') if not args.smoke else 'SKIP (smoke)'} "
           f"(sync {pipe_qps[2][0]:.1f} vs {pipe_qps[1][0]:.1f}, "
           f"queued {pipe_qps[2][1]:.1f} vs {pipe_qps[1][1]:.1f})")
+    # ISSUE 6: rank-stability stopping must cut sweeps >= 2x on the
+    # slow-rank gadgets at unchanged top-k (deterministic; armed in
+    # --smoke — iteration counts, not wall time)
+    ok_early = topk_same and it_rank * 2.0 <= it_exact
+    print(f"ACCEPTANCE early_exit>=2x: {'PASS' if ok_early else 'FAIL'} "
+          f"({it_exact:.1f} -> {it_rank:.1f} sweeps, "
+          f"topk {'identical' if topk_same else 'CHANGED'})")
+    # ISSUE 6: under overload the SLA queue must shed best-effort traffic
+    # (never the guaranteed class), degrade rank_k, resolve shed tickets
+    # during admission, and hold the high-priority p95 the collapse queue
+    # lets balloon
+    sla, col = over["sla"], over["collapse"]
+    hi_shed = sla["stats"]["classes"].get(0, {}).get("shed", -1)
+    ok_protect = (sla["stats"]["shed"] >= 1 and hi_shed == 0
+                  and sla["stats"]["degraded"] >= 1)
+    print(f"ACCEPTANCE shed_protects_high: "
+          f"{'PASS' if ok_protect else 'FAIL'} "
+          f"(shed {sla['stats']['shed']}, class-0 shed {hi_shed}, "
+          f"degraded {sla['stats']['degraded']})")
+    ok_prompt = sla["shed_prompt"]
+    print(f"ACCEPTANCE shed_prompt: {'PASS' if ok_prompt else 'FAIL'} "
+          f"(shed tickets resolved during the admission storm)")
+    ok_collapse = sla["p95_hi_ms"] < col["p95_hi_ms"]
+    print(f"ACCEPTANCE shed_beats_collapse: "
+          f"{'PASS' if ok_collapse else 'FAIL'} "
+          f"(high-pri p95 {sla['p95_hi_ms']:.1f}ms sla vs "
+          f"{col['p95_hi_ms']:.1f}ms collapsed)")
     return 0 if (ok_speed and ok_match and ok_warm and ok_ladder
                  and ok_queue and ok_plan_hits and ok_plan_latency
-                 and ok_pipe_parity and ok_pipe_speed) else 1
+                 and ok_pipe_parity and ok_pipe_speed and ok_early
+                 and ok_protect and ok_prompt and ok_collapse) else 1
 
 
 if __name__ == "__main__":

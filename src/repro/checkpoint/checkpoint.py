@@ -69,14 +69,27 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
     return final
 
 
+def _step_num(name: str) -> Optional[int]:
+    """The ``step_<k>`` suffix as an int, or None for foreign/junk names
+    (``step_backup``, editor droppings): a stray non-numeric dir must
+    read as absent, not crash every reader that scans the directory."""
+    if not name.startswith("step_"):
+        return None
+    try:
+        return int(name[5:])
+    except ValueError:
+        return None
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and os.path.exists(
+        s = _step_num(name)
+        if s is not None and os.path.exists(
                 os.path.join(ckpt_dir, name, "manifest.json")):
-            steps.append(int(name[5:]))
+            steps.append(s)
     return max(steps) if steps else None
 
 
@@ -110,8 +123,8 @@ def prune(ckpt_dir: str, keep: int = 3):
     """Keep the newest ``keep`` checkpoints."""
     if not os.path.isdir(ckpt_dir):
         return
-    steps = sorted(s for s in (
-        int(n[5:]) for n in os.listdir(ckpt_dir) if n.startswith("step_")))
+    steps = sorted(s for s in map(_step_num, os.listdir(ckpt_dir))
+                   if s is not None)
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
                       ignore_errors=True)

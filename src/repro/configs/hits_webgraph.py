@@ -24,9 +24,16 @@ class RankingConfig:
     serve_pipeline_depth: int = 2
     # bsr: fused on-device convergence loop (one dispatch per batch)
     serve_bsr_fused: bool = True
+    # rank-stability early exit (Peserico & Pretto): a column stops once
+    # its top-rank_k authority ordering has been unchanged stable_sweeps
+    # sweeps running; 0 = exact-residual stopping only
+    serve_rank_k: int = 0
+    serve_stable_sweeps: int = 2
     # async micro-batching frontend (serve.queue.RankQueue)
     serve_deadline_ms: float = 5.0  # max extra batching latency per request
     serve_queue_depth: int = 0      # distinct pending bound (0: 4*v_max)
+    # SLA admission: classes >= shed_priority are best-effort (sheddable)
+    serve_shed_priority: int = 1
     # restart-survivable cache spill (serve.spill.CacheSpill)
     serve_spill_dir: str = ""       # "": in-process cache only
     serve_spill_policy: str = "all"  # all | evict

@@ -112,10 +112,11 @@ def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret", "accum_dtype",
-                                             "max_iter"))
+                                             "max_iter", "rank_k",
+                                             "stable_sweeps"))
 def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
                       tol, *, bs: int, interpret: bool, accum_dtype,
-                      max_iter: int):
+                      max_iter: int, rank_k: int = 0, stable_sweeps: int = 2):
     """On-device masked multi-column accelerated-HITS convergence over two
     BSR operators: ``lax.while_loop`` around the Pallas sweep, tolerance
     check in the carry.
@@ -128,6 +129,17 @@ def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
     did), and all columns keep sweeping until the last converges
     (converged columns sit at their fixed point). ``tol`` is a traced
     argument, so retuning tolerance never recompiles.
+
+    ``rank_k > 0`` adds the Peserico–Pretto rank-stability rule: a column
+    also stops once the *ordering* of its top-``rank_k`` authority entries
+    has been unchanged for ``stable_sweeps`` consecutive sweeps — score
+    convergence can lag rank convergence arbitrarily, so on slow-spectral
+    graphs this saves most of the sweeps at unchanged top-k. The check
+    runs on the in-loop (unnormalized) authority, which orders identically
+    to the normalized scores; ties break to the lowest index
+    (``lax.top_k`` semantics). ``rank_k``/``stable_sweeps`` are static: at
+    ``rank_k=0`` the carry and trace are bit-identical to the
+    residual-only loop.
 
     lt_*: the transpose operator (authority half-step), l_*: the forward
     operator (hub half-step); h0/ca/ch/mask: (n_pad, V). Returns
@@ -144,22 +156,39 @@ def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
         a = half(lt_blocks, lt_idx, h, ch) * mask
         h_new = half(l_blocks, l_idx, a, ca) * mask
         return h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=True)
-                        + 1e-30)
+                        + 1e-30), a
+
+    k_eff = min(int(rank_k), h0.shape[0]) if rank_k else 0
 
     def body(state):
-        h, k, conv = state
-        h_new = sweep(h)
+        if k_eff:
+            h, k, conv, top_prev, stab = state
+        else:
+            h, k, conv = state
+        h_new, a = sweep(h)
         delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
-        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+        stop = delta <= tol
+        if k_eff:
+            top = jax.lax.top_k(a.T, k_eff)[1]               # (V, k) int32
+            same = jnp.all(top == top_prev, axis=1)
+            stab = jnp.where(same, stab + 1, 0)
+            stop = stop | (stab >= stable_sweeps)
+            conv = jnp.where((conv < 0) & stop, k + 1, conv)
+            return h_new, k + 1, conv, top, stab
+        conv = jnp.where((conv < 0) & stop, k + 1, conv)
         return h_new, k + 1, conv
 
     def cond(state):
-        _h, k, conv = state
+        k, conv = state[1], state[2]
         return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
 
-    init = (h0, jnp.array(0, jnp.int32),
-            jnp.full((h0.shape[1],), -1, jnp.int32))
-    h, k, conv = jax.lax.while_loop(cond, body, init)
+    v = h0.shape[1]
+    init = (h0, jnp.array(0, jnp.int32), jnp.full((v,), -1, jnp.int32))
+    if k_eff:
+        init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                       jnp.zeros((v,), jnp.int32))
+    state = jax.lax.while_loop(cond, body, init)
+    h, k, conv = state[0], state[1], state[2]
     conv = jnp.where(conv < 0, k, conv)  # hit max_iter (or max_iter == 0)
     # finalize: recompute authority from the converged h, as the host loop
     # (and hits._finalize) does

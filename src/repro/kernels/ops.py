@@ -77,7 +77,8 @@ def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
 
 def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
                  max_iter: int, interpret: bool | None = None,
-                 accum_dtype=jnp.float32, perm=None, inv=None):
+                 accum_dtype=jnp.float32, perm=None, inv=None,
+                 rank_k: int = 0, stable_sweeps: int = 2):
     """Fused on-device convergence loop over a DeviceBSR operator pair.
 
     a = Lᵀ(h ⊙ ch)·mask;  h' = L(a ⊙ ca)·mask;  h' ← h'/‖h'‖₁, iterated by
@@ -93,6 +94,13 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     entry and results scattered back by ``inv`` at the exit via
     ``jnp.take`` — the whole per-batch vector permutation stays on
     device, with outputs in the caller's original node order.
+
+    ``rank_k``/``stable_sweeps`` pass through to the kernel loop's
+    rank-stability early exit. Note the stability check runs in the
+    *operator's* node order (i.e. permuted space when ``perm`` is given):
+    whether an ordering repeats across sweeps is permutation-invariant,
+    so stopping sweeps agree with the dense backend up to tie-breaks
+    among exactly-equal scores.
     """
     assert lt.bs == lfwd.bs and lt.n_pad == lfwd.n_pad, "mismatched operators"
     n = h0.shape[0]
@@ -108,7 +116,8 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     h, a, conv = bsr_converge_cols(
         lt.blocks, lt.idx, lfwd.blocks, lfwd.idx, *args, tol,
         bs=lt.bs, interpret=resolve_interpret(interpret),
-        accum_dtype=accum_dtype, max_iter=max_iter)
+        accum_dtype=accum_dtype, max_iter=max_iter,
+        rank_k=int(rank_k), stable_sweeps=int(stable_sweeps))
     h, a = h[:n], a[:n]
     if inv is not None:
         inv = jnp.asarray(inv)

@@ -79,6 +79,13 @@ def main():
                     help="staged-dispatch batches in flight (1: serial; "
                          ">=2: overlap host assemble/plan with the "
                          "previous batch's device sweep)")
+    ap.add_argument("--rank-k", type=int, default=CONFIG.serve_rank_k,
+                    help="rank-stability early exit: stop a column once its "
+                         "top-k authority ordering holds stable (0: exact "
+                         "residual stopping)")
+    ap.add_argument("--stable-sweeps", type=int,
+                    default=CONFIG.serve_stable_sweeps,
+                    help="consecutive stable sweeps required to early-exit")
     ap.add_argument("--frontend", default="sync",
                     choices=["sync", "queued"],
                     help="sync: pre-built v_max chunks; queued: async "
@@ -91,6 +98,16 @@ def main():
     ap.add_argument("--queue-depth", type=int,
                     default=CONFIG.serve_queue_depth or None,
                     help="queued: max distinct pending root sets")
+    ap.add_argument("--sla-ms", type=float, default=0.0,
+                    help="queued: per-request deadline for EDF batching and "
+                         "deadline-miss accounting (0: none)")
+    ap.add_argument("--low-pri-frac", type=float, default=0.0,
+                    help="queued: fraction of requests submitted at the "
+                         "best-effort class (sheddable under overload)")
+    ap.add_argument("--shed-priority", type=int,
+                    default=CONFIG.serve_shed_priority,
+                    help="queued: lowest priority class still guaranteed is "
+                         "shed_priority-1; classes >= this may shed")
     ap.add_argument("--spill-dir", default=CONFIG.serve_spill_dir or None,
                     help="cache spill directory (restart-survivable cache)")
     ap.add_argument("--spill-policy", default=CONFIG.serve_spill_policy,
@@ -116,8 +133,11 @@ def main():
                                  plan_cache_size=args.plan_cache,
                                  bsr_fused=not args.bsr_host_loop,
                                  pipeline_depth=args.pipeline_depth,
+                                 rank_k=args.rank_k,
+                                 stable_sweeps=args.stable_sweeps,
                                  deadline_ms=args.deadline_ms,
                                  queue_depth=args.queue_depth,
+                                 shed_priority=args.shed_priority,
                                  spill_dir=spill,
                                  spill_policy=args.spill_policy)
 
@@ -139,20 +159,33 @@ def main():
         gaps = (rng.exponential(1.0 / args.arrival_qps, len(stream))
                 if args.arrival_qps > 0 else np.zeros(len(stream)))
         t0 = time.time()
+        sla = args.sla_ms or None
         with svc.queue() as q:
             tickets = []
             for roots, gap in zip(stream, gaps):
                 if gap:
                     time.sleep(gap)
-                tickets.append(q.submit(roots))
+                pri = (args.shed_priority
+                       if rng.uniform() < args.low_pri_frac else 0)
+                tickets.append(q.submit(roots, priority=pri,
+                                        deadline_ms=sla))
             results = [t.result(timeout=600) for t in tickets]
         dt = time.time() - t0
         lat = np.array([t.latency_s for t in tickets]) * 1e3
-        qs = q.stats
+        qs = q.snapshot_stats()
         print(f"queue: {qs['batches']} batches "
               f"(vmax {qs['flush_vmax']} / deadline {qs['flush_deadline']} "
-              f"/ drain {qs['flush_drain']}), {qs['coalesced']} coalesced, "
-              f"max width {qs['max_batch']}")
+              f"/ drain {qs['flush_drain']} / close {qs['flush_close']}), "
+              f"{qs['coalesced']} coalesced, max width {qs['max_batch']}")
+        print(f"sla: {qs['shed']} shed ({qs['shed_evicted']} evicted) / "
+              f"{qs['deadline_miss']} deadline misses / "
+              f"{qs['degraded']} degraded batches")
+        for pri, c in qs["classes"].items():
+            p50 = "-" if c["p50_ms"] is None else f"{c['p50_ms']:.1f}ms"
+            p95 = "-" if c["p95_ms"] is None else f"{c['p95_ms']:.1f}ms"
+            print(f"  class {pri}: {c['submitted']} submitted / "
+                  f"{c['served']} served / {c['shed']} shed, "
+                  f"p50 {p50} p95 {p95}")
     else:
         t0 = time.time()
         results = svc.rank(stream)

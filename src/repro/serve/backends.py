@@ -74,6 +74,12 @@ class SweepBatch:
 
     h0/ca/ch/mask: (n_pad, V); src/dst/w: (e_pad,) with sentinel edges
     pointing at the dead pad row n_pad-1 carrying w=0.
+
+    ``rank_k``/``stable_sweeps`` are the rank-stability stopping params
+    every backend honors identically: with ``rank_k > 0`` a column also
+    stops once its top-``rank_k`` authority ordering has been unchanged
+    for ``stable_sweeps`` consecutive sweeps (Peserico–Pretto early
+    exit); ``rank_k=0`` is the exact-residual-only legacy rule.
     """
 
     h0: np.ndarray
@@ -86,6 +92,8 @@ class SweepBatch:
     tol: float
     max_iter: int
     dtype: object
+    rank_k: int = 0
+    stable_sweeps: int = 2
 
     def structure_key(self) -> str:
         """Hash of the structure-only fields a plan may depend on."""
@@ -150,32 +158,53 @@ class SweepBackend:
 # ------------------------------------------------------------------- dense
 
 
-@partial(jax.jit, static_argnames=("max_iter",))
-def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter):
+@partial(jax.jit, static_argnames=("max_iter", "rank_k", "stable_sweeps"))
+def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter,
+                    rank_k=0, stable_sweeps=2):
     """On-device convergence loop for V masked columns.
 
     Per-column L1 residuals; ``conv[j]`` records the sweep at which column
     j first hit tol (-1 while running). All columns keep sweeping until the
     last converges — converged columns sit at their fixed point.
+    ``rank_k > 0`` adds the rank-stability stop (ordering of the top-k
+    in-loop authority entries unchanged ``stable_sweeps`` sweeps running);
+    it is static, so ``rank_k=0`` traces the legacy residual-only loop.
     Returns (h, a, conv).
     """
     edges = EdgeList(src, dst, h0.shape[0], w)
     sweep = hits_sweep_cols(edges, ca, ch, mask)
+    k_eff = min(int(rank_k), h0.shape[0]) if rank_k else 0
 
     def body(state):
-        h, _a, k, conv = state
+        if k_eff:
+            h, _a, k, conv, top_prev, stab = state
+        else:
+            h, _a, k, conv = state
         h_new, a = sweep(h)
         delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
-        conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+        stop = delta <= tol
+        if k_eff:
+            top = jax.lax.top_k(a.T, k_eff)[1]               # (V, k) int32
+            same = jnp.all(top == top_prev, axis=1)
+            stab = jnp.where(same, stab + 1, 0)
+            stop = stop | (stab >= stable_sweeps)
+            conv = jnp.where((conv < 0) & stop, k + 1, conv)
+            return h_new, a, k + 1, conv, top, stab
+        conv = jnp.where((conv < 0) & stop, k + 1, conv)
         return h_new, a, k + 1, conv
 
     def cond(state):
-        _h, _a, k, conv = state
+        k, conv = state[2], state[3]
         return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
 
+    v = h0.shape[1]
     init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
-            jnp.full((h0.shape[1],), -1, jnp.int32))
-    h, _a, k, conv = jax.lax.while_loop(cond, body, init)
+            jnp.full((v,), -1, jnp.int32))
+    if k_eff:
+        init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                       jnp.zeros((v,), jnp.int32))
+    state = jax.lax.while_loop(cond, body, init)
+    h, k, conv = state[0], state[2], state[3]
     conv = jnp.where(conv < 0, k, conv)  # hit max_iter
     # finalize: recompute authority from converged h (same as hits._finalize)
     a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
@@ -210,7 +239,8 @@ class DenseSweepBackend(SweepBackend):
         h, a, conv = _converge_batch(
             jnp.asarray(b.h0, b.dtype), plan.src, plan.dst, plan.w,
             jnp.asarray(b.ca, b.dtype), jnp.asarray(b.ch, b.dtype),
-            jnp.asarray(b.mask, b.dtype), b.tol, b.max_iter)
+            jnp.asarray(b.mask, b.dtype), b.tol, b.max_iter,
+            rank_k=int(b.rank_k), stable_sweeps=int(b.stable_sweeps))
         return np.asarray(h), np.asarray(a), np.asarray(conv)
 
 
@@ -235,8 +265,11 @@ def shared_mesh(devices, axes):
     return mesh
 
 
-def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes):
-    key = (mesh, mode, n_pad, per, v, max_iter, np.dtype(dtype).str)
+def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes,
+                      rank_k=0, stable_sweeps=2):
+    k_eff = min(int(rank_k), n_pad) if rank_k else 0
+    key = (mesh, mode, n_pad, per, v, max_iter, np.dtype(dtype).str,
+           k_eff, int(stable_sweeps))
     fn = _SHARDED_JIT.get(key)
     if fn is not None:
         return fn
@@ -246,19 +279,36 @@ def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes):
         lead = tuple(range(h0.ndim - 1))  # (0,) full | (0, 1) blocked
 
         def body(state):
-            h, _a, k, conv = state
+            if k_eff:
+                h, _a, k, conv, top_prev, stab = state
+            else:
+                h, _a, k, conv = state
             h_new, a = smapped(h, ca, ch, m, *eargs)
             delta = jnp.sum(jnp.abs(h_new - h), axis=lead)
-            conv = jnp.where((conv < 0) & (delta <= tol), k + 1, conv)
+            stop = delta <= tol
+            if k_eff:
+                # blocked layouts flatten back to node-major rows; pad
+                # rows are zero and tie-break below every real score
+                top = jax.lax.top_k(a.reshape(-1, v).T, k_eff)[1]
+                same = jnp.all(top == top_prev, axis=1)
+                stab = jnp.where(same, stab + 1, 0)
+                stop = stop | (stab >= stable_sweeps)
+                conv = jnp.where((conv < 0) & stop, k + 1, conv)
+                return h_new, a, k + 1, conv, top, stab
+            conv = jnp.where((conv < 0) & stop, k + 1, conv)
             return h_new, a, k + 1, conv
 
         def cond(state):
-            _h, _a, k, conv = state
+            k, conv = state[2], state[3]
             return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
 
         init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
                 jnp.full((v,), -1, jnp.int32))
-        h, _a, k, conv = jax.lax.while_loop(cond, body, init)
+        if k_eff:
+            init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                           jnp.zeros((v,), jnp.int32))
+        state = jax.lax.while_loop(cond, body, init)
+        h, k, conv = state[0], state[2], state[3]
         conv = jnp.where(conv < 0, k, conv)
         # finalize: one more masked authority half-step from converged h
         _h2, a = smapped(h, ca, ch, m, *eargs)
@@ -356,7 +406,9 @@ class ShardedSweepBackend(SweepBackend):
         h0, ca, ch, m = self._vector_layout(plan, b.h0, b.ca, b.ch, b.mask,
                                             b.dtype)
         fn = _sharded_converge(plan.mesh, plan.mode, n_pad, plan.per, v,
-                               b.max_iter, b.dtype, self.axes)
+                               b.max_iter, b.dtype, self.axes,
+                               rank_k=int(b.rank_k),
+                               stable_sweeps=int(b.stable_sweeps))
         with set_mesh(plan.mesh):
             h, a, conv = fn(h0, ca, ch, m, plan.eargs, b.tol)
         h = np.asarray(h).reshape(-1, v)[:n_pad]
@@ -477,13 +529,19 @@ class BsrSweepBackend(SweepBackend):
             h, a, conv = bsr_converge(plan.lt, plan.lfwd, h, ca, ch, m,
                                       b.tol, b.max_iter, self.interpret,
                                       plan.accum_dtype,
-                                      perm=plan.perm_dev, inv=plan.inv_dev)
+                                      perm=plan.perm_dev, inv=plan.inv_dev,
+                                      rank_k=int(b.rank_k),
+                                      stable_sweeps=int(b.stable_sweeps))
             return np.asarray(h), np.asarray(a), np.asarray(conv)
         # host-driven reference loop: one residual round trip per sweep
         # (entry/exit permutation still on device, once per batch)
         perm_d, inv_d = plan.perm_dev, plan.inv_dev
         h, ca, ch, m = (jnp.take(x, perm_d, axis=0) for x in (h, ca, ch, m))
         v = b.h0.shape[1]
+        k_eff = min(int(b.rank_k), b.h0.shape[0]) if b.rank_k else 0
+        if k_eff:
+            top_prev = np.full((v, k_eff), -1, np.int64)
+            stab = np.zeros(v, np.int64)
         conv = np.full(v, -1, np.int32)
         k = 0
         while k < b.max_iter and (conv < 0).any():
@@ -493,8 +551,18 @@ class BsrSweepBackend(SweepBackend):
                                plan.accum_dtype) * m
             h_new = normalize_l1(h_new, axis=0)
             delta = np.asarray(jnp.sum(jnp.abs(h_new - h), axis=0))
+            stop = delta <= b.tol
+            if k_eff:
+                # numpy mirror of the fused loop's rank-stability stop;
+                # stable argsort of -a == lax.top_k's lowest-index ties
+                top = np.argsort(-np.asarray(a), axis=0,
+                                 kind="stable")[:k_eff].T
+                same = (top == top_prev).all(axis=1)
+                stab = np.where(same, stab + 1, 0)
+                stop = stop | (stab >= int(b.stable_sweeps))
+                top_prev = top
             k += 1
-            conv = np.where((conv < 0) & (delta <= b.tol), k, conv)
+            conv = np.where((conv < 0) & stop, k, conv)
             h = h_new
         conv = np.where(conv < 0, k, conv)
         a = bsr_matvec(plan.lt, h, ch, self.interpret, plan.accum_dtype) * m

@@ -75,13 +75,16 @@ class PipelineJob:
     poison a batch). ``tag`` is opaque frontend payload (the queue stores
     its ``_Pending`` list there); ``on_done(job, results, exc)`` runs at
     the end of ``publish`` — or with the exception if any stage failed —
-    on the pipeline's driving thread.
+    on the pipeline's driving thread. ``rank_k`` overrides the service's
+    configured rank-stability k for this job only (the queue degrades it
+    under backlog); None means "use the config".
     """
 
     queries: List[np.ndarray]
     refresh: bool = False
     tag: Any = None
     on_done: Optional[Callable] = None
+    rank_k: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -244,9 +247,11 @@ class ServePipeline:
                 h0[:n_u, j], asm.statuses[j] = \
                     svc._start_vector(fs, entry, m, loc)
             asm.backend = svc._backend_for(n_u, e_u)
+        rank_k = svc.cfg.rank_k if job.rank_k is None else int(job.rank_k)
         asm.batch = SweepBatch(
             h0=h0, src=src, dst=dst, w=w, ca=ca, ch=ch, mask=mask,
-            tol=svc.cfg.tol, max_iter=svc.cfg.max_iter, dtype=svc._dtype)
+            tol=svc.cfg.tol, max_iter=svc.cfg.max_iter, dtype=svc._dtype,
+            rank_k=rank_k, stable_sweeps=svc.cfg.stable_sweeps)
         return asm
 
     def plan(self, asm: _Assembled) -> _Assembled:

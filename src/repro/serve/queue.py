@@ -17,6 +17,21 @@ duplicates never consume queue depth or batch columns), and a bounded
 pending set gives natural backpressure: ``submit`` blocks once
 ``max_pending`` distinct root sets are waiting.
 
+**SLA-aware admission.** Each submit carries a priority class (lower =
+more important; default 0 = guaranteed) and an optional per-request
+deadline. Batch formation is EDF — ``_take_batch`` serves the earliest
+deadlines first (deadline-less submits keep FIFO order among themselves)
+— and under overload the queue sheds instead of collapsing: when the
+pending set is full, a best-effort submit (priority >= ``shed_priority``)
+resolves immediately with a ``status="shed"`` result, and a guaranteed
+submit evicts the least-urgent sheddable pending column rather than
+blocking behind it. When the backlog still exceeds a batch width at
+dispatch time, the job's effective ``rank_k`` halves (coarser
+rank-stability certificates, fewer sweeps per query) — degrade the
+quality dial, not everyone's p99. Per-class latency, ``shed``,
+``deadline_miss`` and ``degraded`` counters surface through
+``snapshot_stats()``.
+
 Dispatch itself is the service's staged ``ServePipeline`` — the same
 assemble → plan → sweep → publish path the synchronous ``rank()`` takes.
 The queue contributes only a *job stream*: each flush decision (v_max
@@ -31,6 +46,7 @@ lock keeps backends from ever seeing concurrent sweeps (including
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from collections import OrderedDict
@@ -41,18 +57,26 @@ import numpy as np
 from ..graph.subgraph import root_set_key
 from .pipeline import PipelineJob
 
+# per-class latency samples kept for percentile reporting (bounded so a
+# long-lived queue never grows without bound)
+_LAT_WINDOW = 4096
+
 
 class QueueTicket:
     """A pending query's handle: blocks on ``result()`` until its batch
-    dispatches (or the queue rejects it)."""
+    dispatches (or the queue rejects/sheds it)."""
 
-    def __init__(self, key: str):
+    def __init__(self, key: str, priority: int = 0,
+                 deadline_at: float = math.inf):
         self.key = key
+        self.priority = int(priority)
+        self.deadline_at = float(deadline_at)  # perf_counter instant
         self.submitted_at = time.perf_counter()
         self._done = threading.Event()
         self._result = None
         self._exc: Optional[BaseException] = None
         self.latency_s: Optional[float] = None  # submit -> resolve
+        self.resolved_at: Optional[float] = None
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -67,7 +91,8 @@ class QueueTicket:
 
     def _resolve(self, result, exc: Optional[BaseException] = None):
         self._result, self._exc = result, exc
-        self.latency_s = time.perf_counter() - self.submitted_at
+        self.resolved_at = time.perf_counter()
+        self.latency_s = self.resolved_at - self.submitted_at
         self._done.set()
 
 
@@ -76,6 +101,8 @@ class _Pending:
     roots: np.ndarray
     tickets: List[QueueTicket]
     submitted_at: float
+    priority: int = 0
+    deadline_at: float = math.inf
 
 
 class RankQueue:
@@ -87,7 +114,7 @@ class RankQueue:
     """
 
     def __init__(self, service, deadline_ms: float = 5.0,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None, shed_priority: int = 1):
         self.service = service
         self.v_max = service.cfg.v_max
         self.deadline_s = float(deadline_ms) / 1e3
@@ -95,58 +122,145 @@ class RankQueue:
                             else int(max_pending))
         if self.max_pending < 1:
             raise ValueError("max_pending must be >= 1")
+        # classes >= shed_priority are best-effort (sheddable under
+        # overload); classes below are guaranteed (backpressure-blocking)
+        self.shed_priority = int(shed_priority)
         self._cond = threading.Condition()
         self._pending: "OrderedDict[str, _Pending]" = OrderedDict()
         self._closed = False
         self.stats = {"submitted": 0, "coalesced": 0, "batches": 0,
                       "flush_vmax": 0, "flush_deadline": 0, "flush_drain": 0,
-                      "max_batch": 0}
+                      "flush_close": 0, "max_batch": 0,
+                      "shed": 0, "shed_evicted": 0, "deadline_miss": 0,
+                      "degraded": 0}
+        self._class_stats: dict = {}  # priority -> counters + latencies
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="rank-queue-dispatch")
         self._thread.start()
 
     # -- client side ------------------------------------------------------
 
-    def submit(self, roots: Sequence[int]) -> QueueTicket:
+    def submit(self, roots: Sequence[int], priority: int = 0,
+               deadline_ms: Optional[float] = None) -> QueueTicket:
         """Enqueue one root set; returns immediately with a ticket.
 
         Invalid root sets raise here, in the caller's thread, so one bad
         request can never poison a batch of good ones at dispatch time.
+
+        ``priority`` is the request's class (lower = more important;
+        classes >= the queue's ``shed_priority`` are best-effort).
+        ``deadline_ms`` is this request's SLA from now: batches form EDF
+        over pending deadlines, and a resolve past the instant counts a
+        ``deadline_miss``. Under a full pending set a best-effort submit
+        resolves immediately with ``status="shed"`` (never blocks), and a
+        guaranteed submit evicts the least-urgent sheddable column before
+        falling back to blocking backpressure.
         """
         roots_u = self.service.validate_roots(roots)
         key = root_set_key(roots_u)
+        priority = int(priority)
+        deadline_at = (math.inf if deadline_ms is None
+                       else time.perf_counter() + float(deadline_ms) / 1e3)
         with self._cond:
             if self._closed:
                 raise RuntimeError("queue is closed")
             self.stats["submitted"] += 1
-            t = self._coalesce(key)
+            self._class(priority)["submitted"] += 1
+            t = self._coalesce(key, priority, deadline_at)
             if t is not None:  # one column serves all tickets for the key
                 return t
             while len(self._pending) >= self.max_pending and not self._closed:
+                if priority >= self.shed_priority:
+                    # best-effort under overload: resolve as shed NOW
+                    # rather than queue-blocking guaranteed traffic
+                    t = QueueTicket(key, priority, deadline_at)
+                    self._shed([t], roots_u)
+                    return t
+                if self._evict_sheddable():
+                    continue  # room made for guaranteed work
                 self._cond.wait(0.05)
                 # the wait releases the lock: another thread may have queued
                 # this same key meanwhile — inserting a second _Pending
                 # would orphan that thread's tickets, so re-check
-                t = self._coalesce(key)
+                t = self._coalesce(key, priority, deadline_at)
                 if t is not None:
                     return t
             if self._closed:
                 raise RuntimeError("queue is closed")
-            t = QueueTicket(key)
-            self._pending[key] = _Pending(roots_u, [t], time.perf_counter())
+            t = QueueTicket(key, priority, deadline_at)
+            self._pending[key] = _Pending(roots_u, [t], time.perf_counter(),
+                                          priority, deadline_at)
             self._cond.notify_all()
             return t
 
-    def _coalesce(self, key: str) -> Optional[QueueTicket]:
+    def _coalesce(self, key: str, priority: int = 0,
+                  deadline_at: float = math.inf) -> Optional[QueueTicket]:
         """Under the lock: attach a ticket to ``key``'s pending column if
-        one exists."""
+        one exists. The column inherits the most urgent class/deadline
+        among its tickets (it serves all of them)."""
         p = self._pending.get(key)
         if p is None:
             return None
-        t = QueueTicket(key)
+        t = QueueTicket(key, priority, deadline_at)
         p.tickets.append(t)
+        p.priority = min(p.priority, priority)
+        p.deadline_at = min(p.deadline_at, deadline_at)
         self.stats["coalesced"] += 1
         return t
+
+    # -- SLA admission (all under the lock) -------------------------------
+
+    def _class(self, priority: int) -> dict:
+        c = self._class_stats.get(priority)
+        if c is None:
+            c = {"submitted": 0, "served": 0, "shed": 0, "lat_ms": []}
+            self._class_stats[priority] = c
+        return c
+
+    def _lat(self, c: dict, t: QueueTicket):
+        lat = c["lat_ms"]
+        lat.append(t.latency_s * 1e3)
+        if len(lat) > _LAT_WINDOW:
+            del lat[: len(lat) - _LAT_WINDOW]
+
+    def _shed_result(self, roots_u: np.ndarray, key: str):
+        """A ``QueryResult`` carrying the shed verdict: the request's own
+        roots as the node set, zero scores, ``status="shed"`` — shaped
+        like a served result so fan-out code needs no special case."""
+        from .rank_service import QueryResult
+        n = len(roots_u)
+        return QueryResult(roots=roots_u, nodes=roots_u.copy(),
+                           authority=np.zeros(n), hub=np.zeros(n),
+                           iters=0, status="shed", key=key)
+
+    def _shed(self, tickets: List[QueueTicket], roots_u: np.ndarray):
+        self.stats["shed"] += len(tickets)
+        res = self._shed_result(roots_u, tickets[0].key)
+        for t in tickets:
+            t._resolve(res)
+            c = self._class(t.priority)
+            c["shed"] += 1
+            self._lat(c, t)
+
+    def _evict_sheddable(self) -> bool:
+        """Shed the least-urgent sheddable pending column to admit a
+        guaranteed one: lowest class first, then the latest deadline,
+        then the newest arrival. False if nothing is sheddable."""
+        victim_key = None
+        worst = (self.shed_priority - 1, -math.inf, -math.inf)
+        for k, p in self._pending.items():
+            if p.priority < self.shed_priority:
+                continue  # guaranteed columns are never evicted
+            cand = (p.priority, p.deadline_at, p.submitted_at)
+            if cand > worst:
+                worst, victim_key = cand, k
+        if victim_key is None:
+            return False
+        p = self._pending.pop(victim_key)
+        self.stats["shed_evicted"] += 1
+        self._shed(p.tickets, p.roots)
+        self._cond.notify_all()
+        return True
 
     def rank_async(self, queries: Sequence[Sequence[int]]) -> List[QueueTicket]:
         return [self.submit(q) for q in queries]
@@ -192,31 +306,73 @@ class RankQueue:
 
     def _take_batch(self) -> List[_Pending]:
         with self._cond:
-            batch = []
-            while self._pending and len(batch) < self.v_max:
-                _key, p = self._pending.popitem(last=False)  # FIFO
-                batch.append(p)
-            if batch:
-                self._cond.notify_all()  # wake backpressured submitters
+            if not self._pending:
+                return []
+            # EDF: earliest deadline first; deadline-less columns (inf)
+            # fall back to arrival order, so the default traffic mix
+            # keeps the old FIFO batches exactly
+            order = sorted(self._pending, key=lambda k: (
+                self._pending[k].deadline_at, self._pending[k].submitted_at))
+            batch = [self._pending.pop(k) for k in order[:self.v_max]]
+            self._cond.notify_all()  # wake backpressured submitters
             return batch
 
-    def _job(self, batch: List[_Pending]) -> PipelineJob:
+    def _job(self, batch: List[_Pending], backlog: int = 0) -> PipelineJob:
         """One pipeline job for a taken batch; ``on_done`` fans results
-        (or the failure) out to every waiting ticket at publish time."""
-        return PipelineJob(queries=[p.roots for p in batch], tag=batch,
-                           on_done=self._resolve_job)
+        (or the failure) out to every waiting ticket at publish time.
+
+        ``backlog`` is what was still pending after the take: when it
+        would fill another whole batch and rank-stability stopping is on,
+        the job runs at half the configured ``rank_k`` — coarser rank
+        certificates buy fewer sweeps per query under overload.
+        """
+        job = PipelineJob(queries=[p.roots for p in batch], tag=batch,
+                          on_done=self._resolve_job)
+        base = int(self.service.cfg.rank_k)
+        if base > 0 and backlog >= self.v_max:
+            job.rank_k = max(1, base // 2)
+            with self._cond:
+                self.stats["degraded"] += 1
+        return job
 
     def _resolve_job(self, job: PipelineJob, results, exc):
         batch = job.tag
-        with self._cond:
-            self.stats["batches"] += 1
-            self.stats["max_batch"] = max(self.stats["max_batch"],
-                                          len(batch))
         if results is None:
             results = [None] * len(batch)
         for p, r in zip(batch, results):
             for t in p.tickets:
                 t._resolve(r, exc)
+        with self._cond:
+            self.stats["batches"] += 1
+            self.stats["max_batch"] = max(self.stats["max_batch"],
+                                          len(batch))
+            for p in batch:
+                for t in p.tickets:
+                    c = self._class(t.priority)
+                    c["served"] += 1
+                    self._lat(c, t)
+                    if t.resolved_at > t.deadline_at:
+                        self.stats["deadline_miss"] += 1
+
+    def snapshot_stats(self) -> dict:
+        """A consistent copy of the queue counters plus per-class
+        admission/latency summaries (``classes[priority]`` with
+        submitted/served/shed counts and p50/p95 ms over a bounded
+        recent window)."""
+        with self._cond:
+            out = dict(self.stats)
+            classes = {}
+            for pri, c in sorted(self._class_stats.items()):
+                lat = np.asarray(c["lat_ms"], float)
+                classes[pri] = {
+                    "submitted": c["submitted"], "served": c["served"],
+                    "shed": c["shed"],
+                    "p50_ms": (float(np.percentile(lat, 50))
+                               if lat.size else None),
+                    "p95_ms": (float(np.percentile(lat, 95))
+                               if lat.size else None)}
+            out["classes"] = classes
+            return out
 
     def _job_stream(self):
         """The dispatcher's job source: block until a flush criterion —
@@ -239,7 +395,13 @@ class RankQueue:
                         if n >= self.v_max:
                             reason = "flush_vmax"
                             break
-                        if self._closed or wait_s <= 0:
+                        if self._closed:
+                            # shutdown drain of a partial batch — its own
+                            # reason, NOT a deadline firing (telemetry
+                            # must tell load-driven flushes from drains)
+                            reason = "flush_close"
+                            break
+                        if wait_s <= 0:
                             reason = "flush_deadline"
                             break
                         self._cond.wait(wait_s)
@@ -251,7 +413,8 @@ class RankQueue:
             if batch:
                 with self._cond:
                     self.stats[reason] += 1
-                yield self._job(batch)
+                    backlog = len(self._pending)
+                yield self._job(batch, backlog=backlog)
 
     def _loop(self):
         # drive the job stream through the service's staged pipeline;

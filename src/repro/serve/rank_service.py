@@ -55,6 +55,13 @@ class RankServiceConfig:
     in_cap: int = 32
     tol: float = 1e-10
     max_iter: int = 1000
+    # rank-stability early exit (Peserico & Pretto: score convergence can
+    # lag rank convergence arbitrarily): with rank_k > 0 a column also
+    # stops once its top-rank_k authority ordering has been unchanged for
+    # stable_sweeps consecutive sweeps. 0 keeps exact-residual stopping
+    # (bit-identical to the legacy loop on every backend).
+    rank_k: int = 0
+    stable_sweeps: int = 2
     cache_size: int = 512      # LRU entries (root-set hash -> scores)
     warm_min_overlap: float = 0.5  # min score coverage to warm-start
     dtype: object = jnp.float64
@@ -76,6 +83,10 @@ class RankServiceConfig:
     # async micro-batching frontend (serve.queue.RankQueue / .queue()):
     deadline_ms: float = 5.0   # max extra latency batching may add
     queue_depth: Optional[int] = None  # max distinct pending (None: 4*v_max)
+    # SLA admission: submits with priority >= shed_priority are
+    # best-effort — under overload they resolve with status "shed"
+    # instead of blocking guaranteed traffic (classes < shed_priority)
+    shed_priority: int = 1
     # restart-survivable cache spill (serve.spill.CacheSpill):
     spill_dir: Optional[str] = None    # None: in-process cache only
     spill_policy: str = "all"  # all: every converged entry | evict: LRU only
@@ -88,7 +99,7 @@ class QueryResult:
     authority: np.ndarray   # L1-normalized over ``nodes``
     hub: np.ndarray
     iters: int              # sweeps to convergence (0 for a cache hit)
-    status: str             # "hit" | "warm" | "cold"
+    status: str             # "hit" | "warm" | "cold" | "shed" (queue only)
     key: str                # root-set hash (the cache key)
 
     def topk(self, k: int = 10):
@@ -129,6 +140,11 @@ class RankService:
             self.cfg = dataclasses.replace(self.cfg, tol=min_tol)
         if self.cfg.backend not in ("dense", "sharded", "bsr", "auto"):
             raise ValueError(f"unknown backend {self.cfg.backend!r}")
+        if self.cfg.rank_k < 0:
+            raise ValueError(f"rank_k must be >= 0, got {self.cfg.rank_k}")
+        if self.cfg.stable_sweeps < 1:
+            raise ValueError(
+                f"stable_sweeps must be >= 1, got {self.cfg.stable_sweeps}")
         if self.cfg.spill_policy not in ("all", "evict"):
             raise ValueError(f"unknown spill policy {self.cfg.spill_policy!r}")
         self.extractor = SubgraphExtractor(g, self.cfg.out_cap,
@@ -167,6 +183,7 @@ class RankService:
         kw.setdefault("deadline_ms", self.cfg.deadline_ms)
         # 0 and None both mean "the 4*v_max default" (configs use 0)
         kw.setdefault("max_pending", self.cfg.queue_depth or None)
+        kw.setdefault("shed_priority", self.cfg.shed_priority)
         return RankQueue(self, **kw)
 
     # -- backends ---------------------------------------------------------
@@ -212,7 +229,11 @@ class RankService:
         (``plan_spilled``).
         """
         skey = batch.structure_key()
-        key = (backend.name, backend.plan_params(), skey)
+        # stopping params join the key: a plan reused under a different
+        # (rank_k, stable_sweeps) regime must never alias spilled records
+        # or future stopping-aware layouts built for another regime
+        key = (backend.name, backend.plan_params(), skey,
+               (int(batch.rank_k), int(batch.stable_sweeps)))
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
@@ -411,8 +432,13 @@ class RankService:
 
     def validate_roots(self, roots: Sequence[int]) -> np.ndarray:
         """Deduped, sorted, range-checked root set (the canonical form every
-        entry point — sync ``rank`` and the async queue — validates to)."""
-        roots_u = np.unique(np.asarray(roots, np.int64)).astype(np.int32)
+        entry point — sync ``rank`` and the async queue — validates to).
+
+        The range check runs on the int64 ids BEFORE the int32 downcast:
+        downcasting first would wrap ids >= 2^31 (2**32 becomes node 0)
+        and silently validate garbage as a real page.
+        """
+        roots_u = np.unique(np.asarray(roots, np.int64))
         if len(roots_u) == 0:
             raise ValueError("empty root set")
         if roots_u[0] < 0 or roots_u[-1] >= self.g.n_nodes:
@@ -420,7 +446,7 @@ class RankService:
             raise ValueError(
                 f"root ids must be in [0, {self.g.n_nodes}); got "
                 f"[{roots_u[0]}, {roots_u[-1]}]")
-        return roots_u
+        return roots_u.astype(np.int32)
 
     def rank(self, queries: Sequence[Sequence[int]], *,
              refresh: bool = False) -> List[QueryResult]:

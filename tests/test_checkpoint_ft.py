@@ -40,6 +40,26 @@ def test_checkpoint_prune_and_latest(tmp_path):
     assert len([d for d in os.listdir(tmp_path) if d.startswith("step_")]) == 2
 
 
+def test_junk_step_dirs_read_as_absent(tmp_path):
+    """Regression: a stray non-numeric ``step_*`` dir (backup copy, editor
+    dropping) used to ValueError out of ``int(name[5:])`` in latest_step
+    and prune — bricking every reader that scans the directory, including
+    restart-restore. Junk must be skipped, not fatal, and never deleted."""
+    params = {"w": jnp.ones((3,))}
+    for s in (1, 2):
+        ck.save(str(tmp_path), s, params)
+    os.makedirs(tmp_path / "step_backup")
+    (tmp_path / "step_backup" / "manifest.json").write_text("{}")
+    os.makedirs(tmp_path / "step_12.orig")
+    assert ck.latest_step(str(tmp_path)) == 2
+    ck.prune(str(tmp_path), keep=1)
+    assert ck.latest_step(str(tmp_path)) == 2
+    assert (tmp_path / "step_backup").is_dir()  # junk untouched by prune
+    assert (tmp_path / "step_12.orig").is_dir()
+    tree, step, _ = ck.restore(str(tmp_path), params)
+    assert step == 2
+
+
 def test_preemption_resume_bit_identical(tmp_path):
     """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
     oc = AdamWConfig(lr=1e-3)

@@ -1,0 +1,157 @@
+"""Rank-stability early exit (Peserico & Pretto: score convergence can
+lag rank convergence arbitrarily).
+
+``rank_k=0`` must reproduce the legacy exact-residual loop bit-for-bit
+(``stable_sweeps`` inert); ``rank_k>0`` must cut sweeps >=2x on the
+slow-rank adversarial gadgets at identical top-k; and all three sweep
+backends must honor the same ``(rank_k, stable_sweeps)`` stopping rule —
+identical per-query iteration counts, not just close scores."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.graph.structure import Graph
+from repro.serve import RankService, RankServiceConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# shared by the in-process tests and the subprocess script below: two
+# node-disjoint complete digraphs K_big / K_{big-1} per gadget, so scores
+# converge at ((big-2)/(big-1))**2 per sweep (~140 sweeps at 1e-12) while
+# the ranking (every K_big node above every K_{big-1} node) locks after
+# one sweep — the regime the early exit exists for
+GADGETS = r"""
+import numpy as np
+from repro.graph.structure import Graph
+
+def gadgets(n_gadgets, big=12):
+    per = 2 * big - 1
+    src, dst, queries = [], [], []
+    for gi in range(n_gadgets):
+        base = gi * per
+        for size, off in ((big, 0), (big - 1, big)):
+            i = np.arange(size)
+            s, d = np.repeat(i, size), np.tile(i, size)
+            keep = s != d
+            src.append(base + off + s[keep])
+            dst.append(base + off + d[keep])
+        queries.append(np.array([base, base + big]))
+    g = Graph(n_gadgets * per, np.concatenate(src), np.concatenate(dst))
+    return g, queries
+"""
+_ns: dict = {}
+exec(GADGETS, _ns)
+gadgets = _ns["gadgets"]
+
+
+def gadget_cfg(rank_k, **kw):
+    kw.setdefault("v_max", 4)
+    kw.setdefault("tol", 1e-12)
+    kw.setdefault("backend", "dense")
+    return RankServiceConfig(out_cap=64, in_cap=64, rank_k=rank_k, **kw)
+
+
+# ------------------------------------------------- rank_k=0 is the old loop
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+def test_rank_k0_bitwise_ignores_stable_sweeps(backend):
+    """With rank_k=0 the stability carry is never traced: results must be
+    bit-identical to the default config for ANY stable_sweeps value."""
+    g = generate_webgraph(WebGraphSpec(260, 2000, 0.5, seed=2))
+    rng = np.random.default_rng(0)
+    queries = [rng.choice(g.n_nodes, size=4, replace=False)
+               for _ in range(4)]
+    ref = RankService(g, RankServiceConfig(
+        v_max=4, tol=1e-12, backend=backend)).rank(queries)
+    for s in (1, 7):
+        svc = RankService(g, RankServiceConfig(
+            v_max=4, tol=1e-12, backend=backend,
+            rank_k=0, stable_sweeps=s))
+        for r, o in zip(svc.rank(queries), ref):
+            assert r.iters == o.iters, (backend, s)
+            assert np.array_equal(r.authority, o.authority), (backend, s)
+            assert np.array_equal(r.hub, o.hub), (backend, s)
+
+
+def test_stopping_param_validation():
+    g = Graph(4, np.array([0, 1], np.int32), np.array([1, 2], np.int32))
+    with pytest.raises(ValueError):
+        RankService(g, RankServiceConfig(rank_k=-1))
+    with pytest.raises(ValueError):
+        RankService(g, RankServiceConfig(stable_sweeps=0))
+
+
+# ------------------------------------------- the early exit earns its keep
+
+
+def test_slow_rank_gadget_early_exit_dense():
+    """On the adversarial gadgets the rank-stable stop must cut sweeps at
+    least 2x per query while returning the identical top-k."""
+    g, queries = gadgets(4)
+    res = {k: RankService(g, gadget_cfg(k)).rank(queries) for k in (0, 4)}
+    for exact, early in zip(res[0], res[4]):
+        assert exact.iters >= 20, exact.iters  # genuinely slow scores
+        assert early.iters * 2 <= exact.iters, (early.iters, exact.iters)
+        assert ([n for n, _ in early.topk(4)]
+                == [n for n, _ in exact.topk(4)])
+        # the early columns still publish an L1-normalized vector
+        assert abs(early.authority.sum() - 1.0) < 1e-6
+
+
+def test_stable_sweeps_bounds_the_exit():
+    """Raising stable_sweeps delays the exit by exactly the extra patience
+    on the gadgets (rank is stable from the first sweep)."""
+    g, queries = gadgets(2)
+    iters = {}
+    for s in (2, 5):
+        svc = RankService(g, gadget_cfg(4, stable_sweeps=s))
+        iters[s] = [r.iters for r in svc.rank(queries)]
+    assert iters[5] == [i + 3 for i in iters[2]], iters
+
+
+# --------------------------------------- one stopping rule, three backends
+
+
+CROSS_BACKEND = GADGETS + r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+from repro.serve import RankService, RankServiceConfig
+
+g, queries = gadgets(4)
+
+def run(**kw):
+    svc = RankService(g, RankServiceConfig(
+        v_max=4, tol=1e-12, out_cap=64, in_cap=64,
+        rank_k=4, stable_sweeps=2, **kw))
+    return [(r.iters, [n for n, _ in r.topk(4)]) for r in svc.rank(queries)]
+
+ref = run(backend="dense")
+assert all(it < 20 for it, _ in ref), ref  # the early exit engaged
+for kw in ({"backend": "bsr"},
+           {"backend": "sharded", "shard_devices": 2,
+            "shard_mode": "replicated"},
+           {"backend": "sharded", "shard_devices": 2,
+            "shard_mode": "dual_blocked"}):
+    got = run(**kw)
+    assert got == ref, (kw, got, ref)
+    print("RANK STABILITY", kw.get("shard_mode", kw["backend"]), "OK")
+"""
+
+
+def test_same_stopping_rule_every_backend():
+    """dense, bsr, and sharded (both modes, 2 host devices) stop each
+    gadget query at the SAME sweep with the SAME top-k under one
+    (rank_k, stable_sweeps) setting."""
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", CROSS_BACKEND],
+                       capture_output=True, text=True, env=env, cwd=ROOT,
+                       timeout=600)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    for tag in ("bsr", "replicated", "dual_blocked"):
+        assert f"RANK STABILITY {tag} OK" in r.stdout

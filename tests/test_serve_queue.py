@@ -77,6 +77,11 @@ def test_close_drains_pending(g, queries):
     assert all(t.result().status == "cold" for t in tickets)
     with pytest.raises(RuntimeError):
         q.submit(queries[0])
+    # the shutdown drain is its own stat — a close-time partial batch used
+    # to masquerade as a deadline firing, corrupting flush telemetry
+    assert q.stats["flush_close"] == 1
+    assert q.stats["flush_deadline"] == 0
+    assert q.stats["flush_vmax"] == 0
 
 
 # ------------------------------------------------------------- coalescing
@@ -139,6 +144,99 @@ def test_backpressure_bounds_distinct_pending(g):
     assert q.stats["max_batch"] <= 2
     with pytest.raises(ValueError):
         svc.queue(max_pending=0)
+
+
+# ------------------------------------------------- SLA admission (ISSUE 6)
+
+
+def _stall_dispatcher(svc, q, filler):
+    """Under the held sweep lock: feed the dispatcher a filler batch so it
+    blocks mid-sweep, leaving the pending set to us. Returns the filler
+    tickets once the take has happened (q.depth back to 0)."""
+    tickets = [q.submit(x) for x in filler]
+    deadline = time.perf_counter() + 60
+    while q.depth > 0:
+        assert time.perf_counter() < deadline, "dispatcher never took filler"
+        time.sleep(0.002)
+    return tickets
+
+
+def test_edf_takes_most_urgent_batch_first(g, queries):
+    """With three pendings under v_max=2, the two tight-deadline columns
+    dispatch before the older deadline-less one (EDF, not FIFO)."""
+    svc = svc_for(g, pipeline_depth=1, v_max=2)
+    svc_for(g, v_max=2).rank(queries)  # compile warmup
+    with svc.queue(deadline_ms=60_000, max_pending=8) as q:
+        with svc.pipeline._sweep_lock:
+            _stall_dispatcher(svc, q, queries[:2])
+            a = q.submit(queries[2])                    # oldest, no deadline
+            b = q.submit(queries[3], deadline_ms=50)
+            c = q.submit(queries[4], deadline_ms=100)
+            time.sleep(0.06)  # stall past b's SLA: a deterministic miss
+        rb, rc = b.result(timeout=120), c.result(timeout=120)
+    # a has no deadline and never fills a batch — the close() drain above
+    # dispatched it after everything urgent
+    ra = a.result(timeout=120)
+    assert rb.status == rc.status == ra.status == "cold"
+    # {b, c} formed the first post-filler batch; a went out last
+    assert b.resolved_at < a.resolved_at
+    assert c.resolved_at < a.resolved_at
+    assert q.stats["batches"] == 3
+    # b's 50ms SLA could not survive the stalled dispatcher
+    assert q.stats["deadline_miss"] >= 1
+
+
+def test_overload_sheds_best_effort_never_guaranteed(g):
+    """Deterministic overload (dispatcher stalled, pending full): a
+    best-effort submit resolves shed immediately; a guaranteed submit
+    evicts the least-urgent sheddable column; class 0 is never shed."""
+    rng = np.random.default_rng(21)
+    qs = [rng.choice(g.n_nodes, size=3, replace=False) for _ in range(8)]
+    svc = svc_for(g, pipeline_depth=1, v_max=2)
+    svc_for(g, v_max=2).rank(qs)  # compile warmup
+    q = svc.queue(deadline_ms=60_000, max_pending=2, shed_priority=1)
+    with svc.pipeline._sweep_lock:
+        fill = _stall_dispatcher(svc, q, qs[:2])
+        b = q.submit(qs[2], priority=1, deadline_ms=50)
+        c = q.submit(qs[3], priority=1)          # pending now full
+        d = q.submit(qs[4], priority=1)          # best-effort: sheds NOW
+        assert d.done() and d.result().status == "shed"
+        assert d.result().iters == 0
+        assert np.array_equal(d.result().authority, np.zeros(3))
+        e = q.submit(qs[5], priority=0)          # guaranteed: evicts c
+        assert c.done() and c.result().status == "shed"
+        assert not b.done() and not e.done()     # b is more urgent than c
+        assert q.depth == 2
+        time.sleep(0.06)  # stall past b's SLA: a deterministic miss
+    served = [t.result(timeout=120) for t in (b, e, *fill)]
+    q.close()
+    assert all(r.status == "cold" for r in served)
+    assert q.stats["shed"] == 2 and q.stats["shed_evicted"] == 1
+    cls = q.snapshot_stats()["classes"]
+    assert cls[1]["shed"] == 2 and cls[0]["shed"] == 0
+    assert cls[0]["served"] == 3 and cls[1]["served"] == 1
+    assert cls[0]["p95_ms"] is not None
+    assert q.stats["deadline_miss"] >= 1  # b blew its 50ms SLA in the stall
+
+
+def test_backlog_degrades_rank_k(g):
+    """A post-take backlog that would fill another whole batch halves the
+    dispatched rank_k (coarser certificates under overload) — and counts
+    it, so operators can see the degradation."""
+    rng = np.random.default_rng(23)
+    qs = [rng.choice(g.n_nodes, size=3, replace=False) for _ in range(8)]
+    svc = svc_for(g, pipeline_depth=1, v_max=2, rank_k=4)
+    # both static-arg regimes the queue may dispatch: full and halved
+    svc_for(g, v_max=2, rank_k=4).rank(qs)
+    svc_for(g, v_max=2, rank_k=2).rank(qs)
+    q = svc.queue(deadline_ms=60_000, max_pending=8)
+    with svc.pipeline._sweep_lock:
+        fill = _stall_dispatcher(svc, q, qs[:2])
+        rest = [q.submit(x) for x in qs[2:8]]    # 6 pending > v_max backlog
+    assert all(t.result(timeout=120) is not None for t in (*fill, *rest))
+    q.close()
+    assert q.stats["degraded"] >= 1
+    assert q.stats["shed"] == 0  # backpressure only: nothing was dropped
 
 
 # -------------------------------------------------- queued == sync parity

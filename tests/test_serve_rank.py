@@ -165,6 +165,24 @@ def test_invalid_root_sets_rejected(g):
     assert svc.stats["queries"] == 0  # nothing partially served
 
 
+def test_overflow_root_ids_rejected_not_wrapped(g):
+    """Regression: validate_roots used to downcast to int32 BEFORE the
+    range check, so ids >= 2**31 wrapped — 2**32 landed exactly on node 0
+    and validated as a legal query. Out-of-range int64 ids must raise,
+    and legal ids must still come back int32 sorted-unique."""
+    svc = RankService(g, RankServiceConfig(v_max=2, tol=TOL))
+    for bad in ([2 ** 31], [2 ** 32], [-(2 ** 33)],
+                [1, g.n_nodes + 2 ** 32]):
+        with pytest.raises(ValueError):
+            svc.validate_roots(bad)
+        with pytest.raises(ValueError):
+            svc.rank([bad])
+    assert svc.stats["queries"] == 0
+    ok = svc.validate_roots([g.n_nodes - 1, 0, 0])
+    assert ok.dtype == np.int32
+    assert ok.tolist() == [0, g.n_nodes - 1]
+
+
 def test_duplicate_queries_share_a_column(g):
     """Identical uncached root sets in one chunk compute once and fan out."""
     svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL))

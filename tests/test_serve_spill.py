@@ -94,6 +94,31 @@ def test_foreign_junk_in_spill_dir_is_ignored(tmp_path, g):
     assert svc.rank([[1, 2, 3]])[0].status == "cold"
 
 
+def test_junk_step_dir_inside_entry_does_not_brick_restart(tmp_path, g,
+                                                           queries):
+    """Regression: ``CacheSpill.keys``/``__contains__`` call
+    ``latest_step`` outside the ``_READ_ERRORS`` guard, so one stray
+    non-numeric ``step_*`` dir inside a spilled entry (backup copy, editor
+    dropping) used to ValueError every restart-restore scan — bricking
+    the whole spill dir, not just the dirty entry."""
+    svc1 = svc_for(g, tmp_path)
+    cold = svc1.rank(queries[:2])
+    del svc1
+    key = cold[0].key
+    (tmp_path / key / "step_backup").mkdir()
+    (tmp_path / key / "step_backup" / "manifest.json").write_text("{}")
+
+    sp = CacheSpill(str(tmp_path))
+    assert key in sp and key in sp.keys()  # used to raise ValueError
+    assert np.array_equal(sp.get(key)["authority"], cold[0].authority)
+    svc2 = svc_for(g, tmp_path)  # the restart path the bug bricked
+    assert svc2.stats["spill_restored"] == 2
+    again = svc2.rank(queries[:2])
+    for c, a in zip(cold, again):
+        assert a.status == "hit" and a.iters == 0
+        assert np.array_equal(a.authority, c.authority)
+
+
 def test_entries_from_wrong_graph_rejected(tmp_path, g):
     """A spill dir written against a bigger graph can't crash warm-table
     indexing — out-of-range node ids are dropped at restore."""
