@@ -24,6 +24,10 @@ class RankingConfig:
     serve_pipeline_depth: int = 2
     # bsr: fused on-device convergence loop (one dispatch per batch)
     serve_bsr_fused: bool = True
+    # precision ladder (serve.backends): bulk sweeps at this dtype then an
+    # f64 polish to tol with a residual certificate; "" = single-phase
+    serve_sweep_dtype: str = ""     # "" | bf16 | fp32 | f64
+    serve_polish_tol: float = 0.0   # 0: polish to the configured tol
     # rank-stability early exit (Peserico & Pretto): a column stops once
     # its top-rank_k authority ordering has been unchanged stable_sweeps
     # sweeps running; 0 = exact-residual stopping only

@@ -113,10 +113,12 @@ def bsr_scaled_matvec(blocks, idx, x, cin, *, bs: int,
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret", "accum_dtype",
                                              "max_iter", "rank_k",
-                                             "stable_sweeps"))
+                                             "stable_sweeps", "bulk_dtype"))
 def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
                       tol, *, bs: int, interpret: bool, accum_dtype,
-                      max_iter: int, rank_k: int = 0, stable_sweeps: int = 2):
+                      max_iter: int, rank_k: int = 0, stable_sweeps: int = 2,
+                      lt_blocks_lo=None, l_blocks_lo=None, bulk_tol=0.0,
+                      bulk_dtype=None):
     """On-device masked multi-column accelerated-HITS convergence over two
     BSR operators: ``lax.while_loop`` around the Pallas sweep, tolerance
     check in the carry.
@@ -141,57 +143,82 @@ def bsr_converge_cols(lt_blocks, lt_idx, l_blocks, l_idx, h0, ca, ch, mask,
     ``rank_k=0`` the carry and trace are bit-identical to the
     residual-only loop.
 
+    ``bulk_dtype`` (static dtype string) arms the precision ladder inside
+    the SAME dispatch: a low-precision copy of the loop — operating on
+    ``lt_blocks_lo``/``l_blocks_lo`` (the caller's cast of the operators)
+    with f32 accumulation — runs first until its residual reaches
+    ``bulk_tol`` (the bulk dtype's floor), then hands its vectors to the
+    full-precision loop. ``max_iter`` bounds the TOTAL sweep count; the
+    rank-stability state resets at the phase boundary (low-precision
+    orderings certify nothing).
+
     lt_*: the transpose operator (authority half-step), l_*: the forward
     operator (hub half-step); h0/ca/ch/mask: (n_pad, V). Returns
-    (h, a, conv) — per-column L1-normalized fixed-point vectors and the
-    int32 sweep counts. Matches the host-driven loop bit-for-bit in exact
+    (h, a, conv, res) — per-column L1-normalized fixed-point vectors, the
+    int32 sweep counts, and the residual certificate: one extra
+    full-precision sweep's L1 movement ``‖sweep(h) − h‖₁`` at the
+    published h. Matches the host-driven loop bit-for-bit in exact
     arithmetic (identical op order and normalization eps).
     """
-    def half(blocks, idx, x, cin):
+    def half(blocks, idx, x, cin, accum):
         return _bsr_scaled_matvec(blocks, idx, x, cin, bs=bs,
-                                  interpret=interpret,
-                                  accum_dtype=accum_dtype)
+                                  interpret=interpret, accum_dtype=accum)
 
-    def sweep(h):
-        a = half(lt_blocks, lt_idx, h, ch) * mask
-        h_new = half(l_blocks, l_idx, a, ca) * mask
-        return h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=True)
-                        + 1e-30), a
+    def make_sweep(tb, fb, cav, chv, mv, accum):
+        def sweep(h):
+            a = half(tb, lt_idx, h, chv, accum) * mv
+            h_new = half(fb, l_idx, a, cav, accum) * mv
+            return h_new / (jnp.sum(jnp.abs(h_new), axis=0, keepdims=True)
+                            + 1e-30), a
+        return sweep
 
     k_eff = min(int(rank_k), h0.shape[0]) if rank_k else 0
-
-    def body(state):
-        if k_eff:
-            h, k, conv, top_prev, stab = state
-        else:
-            h, k, conv = state
-        h_new, a = sweep(h)
-        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
-        stop = delta <= tol
-        if k_eff:
-            top = jax.lax.top_k(a.T, k_eff)[1]               # (V, k) int32
-            same = jnp.all(top == top_prev, axis=1)
-            stab = jnp.where(same, stab + 1, 0)
-            stop = stop | (stab >= stable_sweeps)
-            conv = jnp.where((conv < 0) & stop, k + 1, conv)
-            return h_new, k + 1, conv, top, stab
-        conv = jnp.where((conv < 0) & stop, k + 1, conv)
-        return h_new, k + 1, conv
-
-    def cond(state):
-        k, conv = state[1], state[2]
-        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
-
     v = h0.shape[1]
-    init = (h0, jnp.array(0, jnp.int32), jnp.full((v,), -1, jnp.int32))
-    if k_eff:
-        init = init + (jnp.full((v, k_eff), -1, jnp.int32),
-                       jnp.zeros((v,), jnp.int32))
-    state = jax.lax.while_loop(cond, body, init)
-    h, k, conv = state[0], state[1], state[2]
+
+    def loop(sweep_fn, h_init, k_init, stop_tol):
+        def body(state):
+            if k_eff:
+                h, k, conv, top_prev, stab = state
+            else:
+                h, k, conv = state
+            h_new, a = sweep_fn(h)
+            delta = jnp.sum(jnp.abs(h_new - h), axis=0)      # (V,)
+            stop = delta <= stop_tol
+            if k_eff:
+                top = jax.lax.top_k(a.T, k_eff)[1]           # (V, k) int32
+                same = jnp.all(top == top_prev, axis=1)
+                stab = jnp.where(same, stab + 1, 0)
+                stop = stop | (stab >= stable_sweeps)
+                conv = jnp.where((conv < 0) & stop, k + 1, conv)
+                return h_new, k + 1, conv, top, stab
+            conv = jnp.where((conv < 0) & stop, k + 1, conv)
+            return h_new, k + 1, conv
+
+        def cond(state):
+            k, conv = state[1], state[2]
+            return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+        init = (h_init, k_init, jnp.full((v,), -1, jnp.int32))
+        if k_eff:
+            init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                           jnp.zeros((v,), jnp.int32))
+        state = jax.lax.while_loop(cond, body, init)
+        return state[0], state[1], state[2]
+
+    sweep_hi = make_sweep(lt_blocks, l_blocks, ca, ch, mask, accum_dtype)
+    k0 = jnp.array(0, jnp.int32)
+    if bulk_dtype is not None:
+        sweep_lo = make_sweep(lt_blocks_lo, l_blocks_lo,
+                              ca.astype(bulk_dtype), ch.astype(bulk_dtype),
+                              mask.astype(bulk_dtype), jnp.float32)
+        h_lo, k0, _ = loop(sweep_lo, h0.astype(bulk_dtype), k0, bulk_tol)
+        h0 = h_lo.astype(h0.dtype)
+    h, k, conv = loop(sweep_hi, h0, k0, tol)
     conv = jnp.where(conv < 0, k, conv)  # hit max_iter (or max_iter == 0)
-    # finalize: recompute authority from the converged h, as the host loop
-    # (and hits._finalize) does
-    a = half(lt_blocks, lt_idx, h, ch) * mask
+    # finalize + certificate: one extra full-precision sweep recomputes the
+    # authority from the converged h (as the host loop and hits._finalize
+    # do) and bounds the published residual
+    h2, a = sweep_hi(h)
+    res = jnp.sum(jnp.abs(h2 - h), axis=0)
     a = a / (jnp.sum(jnp.abs(a), axis=0, keepdims=True) + 1e-30)
-    return h, a, conv
+    return h, a, conv, res

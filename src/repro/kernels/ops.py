@@ -78,7 +78,10 @@ def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
 def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
                  max_iter: int, interpret: bool | None = None,
                  accum_dtype=jnp.float32, perm=None, inv=None,
-                 rank_k: int = 0, stable_sweeps: int = 2):
+                 rank_k: int = 0, stable_sweeps: int = 2,
+                 lt_lo: DeviceBSR | None = None,
+                 lfwd_lo: DeviceBSR | None = None,
+                 bulk_tol: float = 0.0, bulk_dtype=None):
     """Fused on-device convergence loop over a DeviceBSR operator pair.
 
     a = Lᵀ(h ⊙ ch)·mask;  h' = L(a ⊙ ca)·mask;  h' ← h'/‖h'‖₁, iterated by
@@ -86,7 +89,12 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     residual hits ``tol`` (or ``max_iter``) — one device dispatch per
     batch, no per-iteration host sync. h0/ca/ch/mask: (n, V) with
     n <= lt.n_pad (rows pad with zeros and slice back off). Returns
-    (h, a, conv) shaped like the inputs.
+    (h, a, conv, res) shaped like the inputs — ``res`` is the per-column
+    residual certificate from one extra full-precision sweep.
+
+    ``bulk_dtype`` (a dtype string) arms the kernel's precision ladder;
+    it requires ``lt_lo``/``lfwd_lo``, the operator pair cast to that
+    dtype, and ``bulk_tol``, the bulk phase's stop tolerance.
 
     ``perm``/``inv``: optional (n,) node permutation (new -> old) and its
     inverse when the operators were built in a reordered space (the BSR
@@ -103,6 +111,8 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     among exactly-equal scores.
     """
     assert lt.bs == lfwd.bs and lt.n_pad == lfwd.n_pad, "mismatched operators"
+    if bulk_dtype is not None and (lt_lo is None or lfwd_lo is None):
+        raise ValueError("bulk_dtype set but lt_lo/lfwd_lo operators missing")
     n = h0.shape[0]
     pad = lt.n_pad - n
     args = (h0, ca, ch, mask)
@@ -113,17 +123,20 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
         args = tuple(jnp.take(x, perm, axis=0) for x in args)
     if pad:
         args = tuple(jnp.pad(x, ((0, pad), (0, 0))) for x in args)
-    h, a, conv = bsr_converge_cols(
+    h, a, conv, res = bsr_converge_cols(
         lt.blocks, lt.idx, lfwd.blocks, lfwd.idx, *args, tol,
         bs=lt.bs, interpret=resolve_interpret(interpret),
         accum_dtype=accum_dtype, max_iter=max_iter,
-        rank_k=int(rank_k), stable_sweeps=int(stable_sweeps))
+        rank_k=int(rank_k), stable_sweeps=int(stable_sweeps),
+        lt_blocks_lo=None if lt_lo is None else lt_lo.blocks,
+        l_blocks_lo=None if lfwd_lo is None else lfwd_lo.blocks,
+        bulk_tol=bulk_tol, bulk_dtype=bulk_dtype)
     h, a = h[:n], a[:n]
     if inv is not None:
         inv = jnp.asarray(inv)
         assert inv.shape[0] == n, (inv.shape, n)
         h, a = jnp.take(h, inv, axis=0), jnp.take(a, inv, axis=0)
-    return h, a, conv
+    return h, a, conv, res
 
 
 def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,

@@ -79,6 +79,14 @@ def main():
                     help="staged-dispatch batches in flight (1: serial; "
                          ">=2: overlap host assemble/plan with the "
                          "previous batch's device sweep)")
+    ap.add_argument("--sweep-dtype", default=CONFIG.serve_sweep_dtype,
+                    help="precision ladder: run bulk sweeps at this dtype "
+                         "(bf16|fp32|f64), then f64-polish to tol with a "
+                         "residual certificate ('': single-phase)")
+    ap.add_argument("--polish-tol", type=float,
+                    default=CONFIG.serve_polish_tol,
+                    help="precision ladder polish tolerance (0: the "
+                         "configured --tol)")
     ap.add_argument("--rank-k", type=int, default=CONFIG.serve_rank_k,
                     help="rank-stability early exit: stop a column once its "
                          "top-k authority ordering holds stable (0: exact "
@@ -133,6 +141,8 @@ def main():
                                  plan_cache_size=args.plan_cache,
                                  bsr_fused=not args.bsr_host_loop,
                                  pipeline_depth=args.pipeline_depth,
+                                 sweep_dtype=args.sweep_dtype,
+                                 polish_tol=args.polish_tol or None,
                                  rank_k=args.rank_k,
                                  stable_sweeps=args.stable_sweeps,
                                  deadline_ms=args.deadline_ms,
@@ -218,8 +228,15 @@ def main():
     if iters:
         print(f"iterated queries: mean {np.mean(iters):.1f} sweeps, "
               f"max {max(iters)}")
+    if args.sweep_dtype:
+        certs = [r.residual for r in results if r.residual is not None]
+        if certs:
+            print(f"precision ladder ({args.sweep_dtype} bulk): residual "
+                  f"certificates max {max(certs):.2e} over "
+                  f"{len(certs)} certified results")
     r = results[-1]
-    print(f"sample query {r.roots.tolist()} [{r.status}]: "
+    cert = "" if r.residual is None else f" res={r.residual:.1e}"
+    print(f"sample query {r.roots.tolist()} [{r.status}{cert}]: "
           f"top-{args.topk} authorities {r.topk(args.topk)}")
 
 

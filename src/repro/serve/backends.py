@@ -55,7 +55,7 @@ from ..sparse.dist import (build_edge_shards_cols,
                            device_put_edge_args_cols,
                            make_dist_hits_sweep_cols,
                            wire_bytes_from_collectives)
-from ..sparse.spmv import normalize_l1, spmv_dst
+from ..sparse.spmv import normalize_l1
 from .plans import (BsrPlan, DensePlan, ShardedPlan, SweepPlan,
                     structure_key)
 
@@ -66,6 +66,51 @@ BACKENDS = ("dense", "sharded", "bsr")
 # when the Pallas path actually compiles (TPU)
 _SHARD_MIN_EDGES = 4096
 _BSR_MIN_EDGES_PER_NODE = 8.0
+
+# --------------------------------------------------------- precision ladder
+#
+# The ladder runs the bulk of convergence sweeps at a cheap dtype
+# (bf16/fp32), then an f64 polish phase iterates to the configured tol and
+# the published result carries an explicit residual certificate. These
+# helpers are THE switch-over criterion — all three backends (and
+# RankService's own tol clamp) share them, so the ladder stops its bulk
+# phase at exactly the residual the bulk dtype can still resolve.
+
+# accepted spellings for RankServiceConfig.sweep_dtype
+_SWEEP_DTYPES = {
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "fp32": "float32", "f32": "float32", "float32": "float32",
+    "fp64": "float64", "f64": "float64", "float64": "float64",
+}
+
+
+def resolve_sweep_dtype(name):
+    """Canonical numpy dtype for a ``sweep_dtype`` spelling; ''/None
+    disables the ladder (returns None). Raises ValueError on junk."""
+    if name is None or name == "":
+        return None
+    if not isinstance(name, str):
+        return np.dtype(jnp.zeros((), name).dtype)  # already dtype-like
+    canon = _SWEEP_DTYPES.get(name.lower())
+    if canon is None:
+        raise ValueError(f"unknown sweep_dtype {name!r} "
+                         f"(want one of {sorted(set(_SWEEP_DTYPES))})")
+    return np.dtype(canon)
+
+
+def dtype_floor(dtype) -> float:
+    """The smallest L1 residual iteration at ``dtype`` can reliably
+    resolve: 1e3 * eps (the same clamp ``RankService.__init__`` applies to
+    ``tol``). Below this a low-precision sweep's residual has stalled at
+    its dtype floor — further sweeps are rounding noise, not progress."""
+    return 1e3 * float(jnp.finfo(jnp.zeros((), dtype).dtype).eps)
+
+
+def bulk_stop_tol(bulk_dtype, tol: float) -> float:
+    """The ladder's switch-over tolerance: the bulk phase stops once its
+    residual reaches max(tol, the bulk dtype's floor), then hands its
+    vectors to the full-precision polish loop."""
+    return max(float(tol), dtype_floor(bulk_dtype))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +125,12 @@ class SweepBatch:
     stops once its top-``rank_k`` authority ordering has been unchanged
     for ``stable_sweeps`` consecutive sweeps (Peserico–Pretto early
     exit); ``rank_k=0`` is the exact-residual-only legacy rule.
+
+    ``bulk_dtype`` arms the precision ladder: a non-None dtype runs the
+    bulk of sweeps at that precision until the residual reaches
+    ``bulk_stop_tol(bulk_dtype, tol)``, then the full-precision polish
+    loop iterates to ``tol``. None is the single-phase legacy loop
+    (bit-identical trace).
     """
 
     h0: np.ndarray
@@ -94,25 +145,42 @@ class SweepBatch:
     dtype: object
     rank_k: int = 0
     stable_sweeps: int = 2
+    bulk_dtype: object = None
 
     def structure_key(self) -> str:
         """Hash of the structure-only fields a plan may depend on."""
         return structure_key(self.src, self.dst, self.w, self.h0.shape[0],
                              self.dtype)
 
+    def ladder_key(self) -> str:
+        """The batch's precision-ladder marker ('' = single-phase) — part
+        of the service plan-cache key, so plans built for different
+        ladders (e.g. the bsr backend's low-precision operator copies)
+        never alias."""
+        return "" if self.bulk_dtype is None else str(np.dtype(self.bulk_dtype))
+
+    def bulk_tol(self) -> float:
+        """The bulk phase's stop tolerance (0.0 when the ladder is off)."""
+        return (0.0 if self.bulk_dtype is None
+                else bulk_stop_tol(self.bulk_dtype, self.tol))
+
 
 class SweepBackend:
     """Interface: plan the structure, then converge batches against it.
 
     ``plan(batch)`` consumes only the batch's structural fields (src/dst/w,
-    n_pad, dtype) and returns the backend's ``SweepPlan``;
+    n_pad, dtype — plus the ladder's ``bulk_dtype``, which keys the plan
+    cache) and returns the backend's ``SweepPlan``;
     ``sweep(plan, batch)`` runs the convergence loop and returns
-    (h, a, conv) numpy arrays — ``h``/``a`` are (n_pad, V) per-column
+    (h, a, conv, res) numpy arrays — ``h``/``a`` are (n_pad, V) per-column
     L1-normalized hub/authority vectors at the fixed point, ``conv[j]`` the
-    sweep at which column j first hit tol (== max_iter when it never did).
-    ``converge(batch)`` is the uncached composition. ``plan_params()``
-    feeds the plan-cache key: every backend knob that changes the plan's
-    layout must appear in it.
+    sweep at which column j first hit tol (== max_iter when it never did),
+    and ``res[j]`` the residual certificate: the L1 distance one more
+    full-precision sweep moves the published h — ``‖sweep(h) − h‖₁`` —
+    so a ladder (or legacy) result's convergence claim is checkable
+    without trusting the loop that produced it. ``converge(batch)`` is the
+    uncached composition. ``plan_params()`` feeds the plan-cache key:
+    every backend knob that changes the plan's layout must appear in it.
     """
 
     name: str = "?"
@@ -124,11 +192,11 @@ class SweepBackend:
         raise NotImplementedError
 
     def sweep(self, plan: SweepPlan, batch: SweepBatch
-              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         raise NotImplementedError
 
     def converge(self, batch: SweepBatch
-                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         return self.sweep(self.plan(batch), batch)
 
     def plan_arrays(self, plan: SweepPlan) -> Tuple[Dict, dict]:
@@ -158,9 +226,11 @@ class SweepBackend:
 # ------------------------------------------------------------------- dense
 
 
-@partial(jax.jit, static_argnames=("max_iter", "rank_k", "stable_sweeps"))
+@partial(jax.jit, static_argnames=("max_iter", "rank_k", "stable_sweeps",
+                                   "bulk_dtype"))
 def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter,
-                    rank_k=0, stable_sweeps=2):
+                    rank_k=0, stable_sweeps=2, bulk_dtype=None,
+                    bulk_tol=0.0):
     """On-device convergence loop for V masked columns.
 
     Per-column L1 residuals; ``conv[j]`` records the sweep at which column
@@ -169,46 +239,69 @@ def _converge_batch(h0, src, dst, w, ca, ch, mask, tol, max_iter,
     ``rank_k > 0`` adds the rank-stability stop (ordering of the top-k
     in-loop authority entries unchanged ``stable_sweeps`` sweeps running);
     it is static, so ``rank_k=0`` traces the legacy residual-only loop.
-    Returns (h, a, conv).
+    ``bulk_dtype`` (a static dtype string) arms the precision ladder: a
+    low-precision copy of the same loop runs first to ``bulk_tol``, hands
+    its vectors to the full-precision loop, and ``max_iter`` bounds the
+    TOTAL sweep count across both phases. Rank-stability state resets at
+    the phase boundary (low-precision orderings don't certify anything).
+    Returns (h, a, conv, res) — ``res`` is the per-column certificate
+    ``‖sweep(h) − h‖₁`` from one extra full-precision sweep.
     """
     edges = EdgeList(src, dst, h0.shape[0], w)
     sweep = hits_sweep_cols(edges, ca, ch, mask)
     k_eff = min(int(rank_k), h0.shape[0]) if rank_k else 0
-
-    def body(state):
-        if k_eff:
-            h, _a, k, conv, top_prev, stab = state
-        else:
-            h, _a, k, conv = state
-        h_new, a = sweep(h)
-        delta = jnp.sum(jnp.abs(h_new - h), axis=0)          # (V,)
-        stop = delta <= tol
-        if k_eff:
-            top = jax.lax.top_k(a.T, k_eff)[1]               # (V, k) int32
-            same = jnp.all(top == top_prev, axis=1)
-            stab = jnp.where(same, stab + 1, 0)
-            stop = stop | (stab >= stable_sweeps)
-            conv = jnp.where((conv < 0) & stop, k + 1, conv)
-            return h_new, a, k + 1, conv, top, stab
-        conv = jnp.where((conv < 0) & stop, k + 1, conv)
-        return h_new, a, k + 1, conv
-
-    def cond(state):
-        k, conv = state[2], state[3]
-        return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
-
     v = h0.shape[1]
-    init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
-            jnp.full((v,), -1, jnp.int32))
-    if k_eff:
-        init = init + (jnp.full((v, k_eff), -1, jnp.int32),
-                       jnp.zeros((v,), jnp.int32))
-    state = jax.lax.while_loop(cond, body, init)
-    h, k, conv = state[0], state[2], state[3]
+
+    def loop(sweep_fn, h_init, k_init, stop_tol):
+        def body(state):
+            if k_eff:
+                h, _a, k, conv, top_prev, stab = state
+            else:
+                h, _a, k, conv = state
+            h_new, a = sweep_fn(h)
+            delta = jnp.sum(jnp.abs(h_new - h), axis=0)      # (V,)
+            stop = delta <= stop_tol
+            if k_eff:
+                top = jax.lax.top_k(a.T, k_eff)[1]           # (V, k) int32
+                same = jnp.all(top == top_prev, axis=1)
+                stab = jnp.where(same, stab + 1, 0)
+                stop = stop | (stab >= stable_sweeps)
+                conv = jnp.where((conv < 0) & stop, k + 1, conv)
+                return h_new, a, k + 1, conv, top, stab
+            conv = jnp.where((conv < 0) & stop, k + 1, conv)
+            return h_new, a, k + 1, conv
+
+        def cond(state):
+            k, conv = state[2], state[3]
+            return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+
+        init = (h_init, jnp.zeros_like(h_init), k_init,
+                jnp.full((v,), -1, jnp.int32))
+        if k_eff:
+            init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                           jnp.zeros((v,), jnp.int32))
+        state = jax.lax.while_loop(cond, body, init)
+        return state[0], state[2], state[3]
+
+    k0 = jnp.array(0, jnp.int32)
+    if bulk_dtype is not None:
+        # bulk phase: same loop at the cheap dtype, stopping at the dtype's
+        # residual floor; its sweep count carries into the polish phase so
+        # max_iter bounds total work
+        edges_lo = EdgeList(src, dst, h0.shape[0], w.astype(bulk_dtype))
+        sweep_lo = hits_sweep_cols(edges_lo, ca.astype(bulk_dtype),
+                                   ch.astype(bulk_dtype),
+                                   mask.astype(bulk_dtype))
+        h_lo, k0, _ = loop(sweep_lo, h0.astype(bulk_dtype), k0, bulk_tol)
+        h0 = h_lo.astype(h0.dtype)
+    h, k, conv = loop(sweep, h0, k0, tol)
     conv = jnp.where(conv < 0, k, conv)  # hit max_iter
-    # finalize: recompute authority from converged h (same as hits._finalize)
-    a = spmv_dst(h * ch, edges.src, edges.dst, edges.n, edges.w) * mask
-    return h, normalize_l1(a, axis=0), conv
+    # finalize + certificate: one extra full-precision sweep from the
+    # published h yields both the recomputed authority (same as
+    # hits._finalize) and the residual bound ‖sweep(h) − h‖₁
+    h2, a = sweep(h)
+    res = jnp.sum(jnp.abs(h2 - h), axis=0)
+    return h, normalize_l1(a, axis=0), conv, res
 
 
 class DenseSweepBackend(SweepBackend):
@@ -236,12 +329,13 @@ class DenseSweepBackend(SweepBackend):
 
     def sweep(self, plan: DensePlan, b: SweepBatch):
         self._check(plan, b)
-        h, a, conv = _converge_batch(
+        h, a, conv, res = _converge_batch(
             jnp.asarray(b.h0, b.dtype), plan.src, plan.dst, plan.w,
             jnp.asarray(b.ca, b.dtype), jnp.asarray(b.ch, b.dtype),
             jnp.asarray(b.mask, b.dtype), b.tol, b.max_iter,
-            rank_k=int(b.rank_k), stable_sweeps=int(b.stable_sweeps))
-        return np.asarray(h), np.asarray(a), np.asarray(conv)
+            rank_k=int(b.rank_k), stable_sweeps=int(b.stable_sweeps),
+            bulk_dtype=b.ladder_key() or None, bulk_tol=b.bulk_tol())
+        return np.asarray(h), np.asarray(a), np.asarray(conv), np.asarray(res)
 
 
 # ----------------------------------------------------------------- sharded
@@ -266,54 +360,74 @@ def shared_mesh(devices, axes):
 
 
 def _sharded_converge(mesh, mode, n_pad, per, v, max_iter, dtype, axes,
-                      rank_k=0, stable_sweeps=2):
+                      rank_k=0, stable_sweeps=2, bulk_dtype=None):
     k_eff = min(int(rank_k), n_pad) if rank_k else 0
     key = (mesh, mode, n_pad, per, v, max_iter, np.dtype(dtype).str,
-           k_eff, int(stable_sweeps))
+           k_eff, int(stable_sweeps), bulk_dtype or "")
     fn = _SHARDED_JIT.get(key)
     if fn is not None:
         return fn
     smapped = make_dist_hits_sweep_cols(mesh, mode, n_pad, axes=axes)
 
-    def converge(h0, ca, ch, m, eargs, tol):
+    def converge(h0, ca, ch, m, eargs, tol, bulk_tol):
         lead = tuple(range(h0.ndim - 1))  # (0,) full | (0, 1) blocked
 
-        def body(state):
-            if k_eff:
-                h, _a, k, conv, top_prev, stab = state
-            else:
-                h, _a, k, conv = state
-            h_new, a = smapped(h, ca, ch, m, *eargs)
-            delta = jnp.sum(jnp.abs(h_new - h), axis=lead)
-            stop = delta <= tol
-            if k_eff:
-                # blocked layouts flatten back to node-major rows; pad
-                # rows are zero and tie-break below every real score
-                top = jax.lax.top_k(a.reshape(-1, v).T, k_eff)[1]
-                same = jnp.all(top == top_prev, axis=1)
-                stab = jnp.where(same, stab + 1, 0)
-                stop = stop | (stab >= stable_sweeps)
+        def loop(args, h_init, k_init, stop_tol):
+            cav, chv, mv, ev = args
+
+            def body(state):
+                if k_eff:
+                    h, _a, k, conv, top_prev, stab = state
+                else:
+                    h, _a, k, conv = state
+                h_new, a = smapped(h, cav, chv, mv, *ev)
+                delta = jnp.sum(jnp.abs(h_new - h), axis=lead)
+                stop = delta <= stop_tol
+                if k_eff:
+                    # blocked layouts flatten back to node-major rows; pad
+                    # rows are zero and tie-break below every real score
+                    top = jax.lax.top_k(a.reshape(-1, v).T, k_eff)[1]
+                    same = jnp.all(top == top_prev, axis=1)
+                    stab = jnp.where(same, stab + 1, 0)
+                    stop = stop | (stab >= stable_sweeps)
+                    conv = jnp.where((conv < 0) & stop, k + 1, conv)
+                    return h_new, a, k + 1, conv, top, stab
                 conv = jnp.where((conv < 0) & stop, k + 1, conv)
-                return h_new, a, k + 1, conv, top, stab
-            conv = jnp.where((conv < 0) & stop, k + 1, conv)
-            return h_new, a, k + 1, conv
+                return h_new, a, k + 1, conv
 
-        def cond(state):
-            k, conv = state[2], state[3]
-            return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
+            def cond(state):
+                k, conv = state[2], state[3]
+                return jnp.logical_and(k < max_iter, jnp.any(conv < 0))
 
-        init = (h0, jnp.zeros_like(h0), jnp.array(0, jnp.int32),
-                jnp.full((v,), -1, jnp.int32))
-        if k_eff:
-            init = init + (jnp.full((v, k_eff), -1, jnp.int32),
-                           jnp.zeros((v,), jnp.int32))
-        state = jax.lax.while_loop(cond, body, init)
-        h, k, conv = state[0], state[2], state[3]
+            init = (h_init, jnp.zeros_like(h_init), k_init,
+                    jnp.full((v,), -1, jnp.int32))
+            if k_eff:
+                init = init + (jnp.full((v, k_eff), -1, jnp.int32),
+                               jnp.zeros((v,), jnp.int32))
+            state = jax.lax.while_loop(cond, body, init)
+            return state[0], state[2], state[3]
+
+        k0 = jnp.array(0, jnp.int32)
+        if bulk_dtype is not None:
+            # bulk phase at the cheap dtype; the dist sweep is
+            # dtype-polymorphic so the same shard_map closure traces at
+            # both precisions inside this one jit
+            cast = (lambda x: x.astype(bulk_dtype)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x)
+            eargs_lo = tuple(cast(x) for x in eargs)
+            args_lo = (ca.astype(bulk_dtype), ch.astype(bulk_dtype),
+                       m.astype(bulk_dtype), eargs_lo)
+            h_lo, k0, _ = loop(args_lo, h0.astype(bulk_dtype), k0, bulk_tol)
+            h0 = h_lo.astype(h0.dtype)
+        h, k, conv = loop((ca, ch, m, eargs), h0, k0, tol)
         conv = jnp.where(conv < 0, k, conv)
-        # finalize: one more masked authority half-step from converged h
-        _h2, a = smapped(h, ca, ch, m, *eargs)
+        # finalize + certificate: one more full-precision sweep from the
+        # published h gives both the recomputed authority and the residual
+        # bound ‖sweep(h) − h‖₁
+        h2, a = smapped(h, ca, ch, m, *eargs)
+        res = jnp.sum(jnp.abs(h2 - h), axis=lead)
         a = a / (jnp.sum(jnp.abs(a), axis=lead, keepdims=True) + 1e-30)
-        return h, a, conv
+        return h, a, conv, res
 
     fn = jax.jit(converge)
     _SHARDED_JIT[key] = fn
@@ -408,12 +522,14 @@ class ShardedSweepBackend(SweepBackend):
         fn = _sharded_converge(plan.mesh, plan.mode, n_pad, plan.per, v,
                                b.max_iter, b.dtype, self.axes,
                                rank_k=int(b.rank_k),
-                               stable_sweeps=int(b.stable_sweeps))
+                               stable_sweeps=int(b.stable_sweeps),
+                               bulk_dtype=b.ladder_key() or None)
         with set_mesh(plan.mesh):
-            h, a, conv = fn(h0, ca, ch, m, plan.eargs, b.tol)
+            h, a, conv, res = fn(h0, ca, ch, m, plan.eargs, b.tol,
+                                 b.bulk_tol())
         h = np.asarray(h).reshape(-1, v)[:n_pad]
         a = np.asarray(a).reshape(-1, v)[:n_pad]
-        return h, a, np.asarray(conv)
+        return h, a, np.asarray(conv), np.asarray(res)
 
     def measure_wire_bytes(self, n_pad: int, v: int, src, dst, w,
                            dtype=jnp.float64) -> float:
@@ -477,15 +593,24 @@ class BsrSweepBackend(SweepBackend):
         g = Graph(n_pad, inv[src], inv[dst])
         bs = min(self.bs, n_pad)
         accum = b.dtype if np.dtype(b.dtype) == np.float64 else jnp.float32
+        lt = DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype, values=w)
+        lfwd = DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
+                               values=w)
+        lt_lo = lfwd_lo = None
+        if b.bulk_dtype is not None:
+            # ladder: low-precision operator copies share the idx arrays;
+            # only the block values are cast (the bulk phase's working set)
+            bd = np.dtype(b.bulk_dtype)
+            lt_lo = DeviceBSR(lt.blocks.astype(bd), lt.idx, bs,
+                              lt.n_nodes, lt.n_pad)
+            lfwd_lo = DeviceBSR(lfwd.blocks.astype(bd), lfwd.idx, bs,
+                                lfwd.n_nodes, lfwd.n_pad)
         return BsrPlan(
             key=key or b.structure_key(), backend=self.name, n_pad=n_pad,
             perm=perm, inv=inv,
             perm_dev=jnp.asarray(perm), inv_dev=jnp.asarray(inv),
-            lt=DeviceBSR.build(g, bs, transpose=True, dtype=b.dtype,
-                               values=w),
-            lfwd=DeviceBSR.build(g, bs, transpose=False, dtype=b.dtype,
-                                 values=w),
-            bs=bs, accum_dtype=accum)
+            lt=lt, lfwd=lfwd, bs=bs, accum_dtype=accum,
+            lt_lo=lt_lo, lfwd_lo=lfwd_lo)
 
     def plan_arrays(self, plan: BsrPlan):
         arrays = {"perm": np.asarray(plan.perm), "inv": np.asarray(plan.inv),
@@ -493,10 +618,14 @@ class BsrSweepBackend(SweepBackend):
                   "lt_idx": np.asarray(plan.lt.idx),
                   "lfwd_blocks": np.asarray(plan.lfwd.blocks),
                   "lfwd_idx": np.asarray(plan.lfwd.idx)}
+        # the lo operator copies are NOT persisted — they're a cast of the
+        # full-precision blocks, rebuilt from them at restore
+        bulk = "" if plan.lt_lo is None else str(np.dtype(plan.lt_lo.blocks.dtype))
         return arrays, {"n_pad": int(plan.n_pad), "bs": int(plan.bs),
                         "bsr_n_nodes": int(plan.lt.n_nodes),
                         "bsr_n_pad": int(plan.lt.n_pad),
-                        "accum": str(np.dtype(plan.accum_dtype))}
+                        "accum": str(np.dtype(plan.accum_dtype)),
+                        "bulk": bulk}
 
     def plan_restore(self, key: str, arrays, meta) -> BsrPlan:
         bs = int(meta["bs"])
@@ -510,11 +639,17 @@ class BsrSweepBackend(SweepBackend):
                          jnp.asarray(arrays["lfwd_idx"]), bs, nn, npd)
         accum = (np.dtype(meta["accum"]) if meta["accum"] == "float64"
                  else jnp.float32)
+        lt_lo = lfwd_lo = None
+        if meta.get("bulk"):
+            bd = np.dtype(meta["bulk"])
+            lt_lo = DeviceBSR(lt.blocks.astype(bd), lt.idx, bs, nn, npd)
+            lfwd_lo = DeviceBSR(lfwd.blocks.astype(bd), lfwd.idx, bs, nn,
+                                npd)
         perm, inv = arrays["perm"], arrays["inv"]
         return BsrPlan(key=key, backend=self.name, n_pad=int(meta["n_pad"]),
                        perm=perm, inv=inv, perm_dev=jnp.asarray(perm),
                        inv_dev=jnp.asarray(inv), lt=lt, lfwd=lfwd, bs=bs,
-                       accum_dtype=accum)
+                       accum_dtype=accum, lt_lo=lt_lo, lfwd_lo=lfwd_lo)
 
     def sweep(self, plan: BsrPlan, b: SweepBatch):
         self._check(plan, b)
@@ -526,49 +661,69 @@ class BsrSweepBackend(SweepBackend):
         m = jnp.asarray(b.mask, b.dtype)
         h = jnp.asarray(b.h0, b.dtype)
         if self.fused:
-            h, a, conv = bsr_converge(plan.lt, plan.lfwd, h, ca, ch, m,
-                                      b.tol, b.max_iter, self.interpret,
-                                      plan.accum_dtype,
-                                      perm=plan.perm_dev, inv=plan.inv_dev,
-                                      rank_k=int(b.rank_k),
-                                      stable_sweeps=int(b.stable_sweeps))
-            return np.asarray(h), np.asarray(a), np.asarray(conv)
+            h, a, conv, res = bsr_converge(
+                plan.lt, plan.lfwd, h, ca, ch, m, b.tol, b.max_iter,
+                self.interpret, plan.accum_dtype,
+                perm=plan.perm_dev, inv=plan.inv_dev,
+                rank_k=int(b.rank_k), stable_sweeps=int(b.stable_sweeps),
+                lt_lo=plan.lt_lo, lfwd_lo=plan.lfwd_lo,
+                bulk_tol=b.bulk_tol(), bulk_dtype=b.ladder_key() or None)
+            return (np.asarray(h), np.asarray(a), np.asarray(conv),
+                    np.asarray(res))
         # host-driven reference loop: one residual round trip per sweep
         # (entry/exit permutation still on device, once per batch)
         perm_d, inv_d = plan.perm_dev, plan.inv_dev
         h, ca, ch, m = (jnp.take(x, perm_d, axis=0) for x in (h, ca, ch, m))
         v = b.h0.shape[1]
         k_eff = min(int(b.rank_k), b.h0.shape[0]) if b.rank_k else 0
-        if k_eff:
-            top_prev = np.full((v, k_eff), -1, np.int64)
-            stab = np.zeros(v, np.int64)
-        conv = np.full(v, -1, np.int32)
-        k = 0
-        while k < b.max_iter and (conv < 0).any():
-            a = bsr_matvec(plan.lt, h, ch, self.interpret,
-                           plan.accum_dtype) * m
-            h_new = bsr_matvec(plan.lfwd, a, ca, self.interpret,
-                               plan.accum_dtype) * m
-            h_new = normalize_l1(h_new, axis=0)
-            delta = np.asarray(jnp.sum(jnp.abs(h_new - h), axis=0))
-            stop = delta <= b.tol
+
+        def host_loop(lt_op, lfwd_op, hh, cah, chh, mh, stop_tol, k, accum):
+            # rank-stability state is loop-local: it resets at the ladder's
+            # phase boundary, mirroring the fused kernel exactly
             if k_eff:
-                # numpy mirror of the fused loop's rank-stability stop;
-                # stable argsort of -a == lax.top_k's lowest-index ties
-                top = np.argsort(-np.asarray(a), axis=0,
-                                 kind="stable")[:k_eff].T
-                same = (top == top_prev).all(axis=1)
-                stab = np.where(same, stab + 1, 0)
-                stop = stop | (stab >= int(b.stable_sweeps))
-                top_prev = top
-            k += 1
-            conv = np.where((conv < 0) & stop, k, conv)
-            h = h_new
+                top_prev = np.full((v, k_eff), -1, np.int64)
+                stab = np.zeros(v, np.int64)
+            conv = np.full(v, -1, np.int32)
+            while k < b.max_iter and (conv < 0).any():
+                a = bsr_matvec(lt_op, hh, chh, self.interpret, accum) * mh
+                h_new = bsr_matvec(lfwd_op, a, cah, self.interpret,
+                                   accum) * mh
+                h_new = normalize_l1(h_new, axis=0)
+                delta = np.asarray(jnp.sum(jnp.abs(h_new - hh), axis=0))
+                stop = delta <= stop_tol
+                if k_eff:
+                    # numpy mirror of the fused loop's rank-stability stop;
+                    # stable argsort of -a == lax.top_k's lowest-index ties
+                    top = np.argsort(-np.asarray(a), axis=0,
+                                     kind="stable")[:k_eff].T
+                    same = (top == top_prev).all(axis=1)
+                    stab = np.where(same, stab + 1, 0)
+                    stop = stop | (stab >= int(b.stable_sweeps))
+                    top_prev = top
+                k += 1
+                conv = np.where((conv < 0) & stop, k, conv)
+                hh = h_new
+            return hh, k, conv
+
+        k = 0
+        if plan.lt_lo is not None:
+            bd = plan.lt_lo.blocks.dtype
+            h_lo, k, _ = host_loop(plan.lt_lo, plan.lfwd_lo, h.astype(bd),
+                                   ca.astype(bd), ch.astype(bd),
+                                   m.astype(bd), b.bulk_tol(), k,
+                                   jnp.float32)
+            h = h_lo.astype(b.dtype)
+        h, k, conv = host_loop(plan.lt, plan.lfwd, h, ca, ch, m, b.tol, k,
+                               plan.accum_dtype)
         conv = np.where(conv < 0, k, conv)
+        # finalize + certificate: one extra full-precision sweep
         a = bsr_matvec(plan.lt, h, ch, self.interpret, plan.accum_dtype) * m
+        h2 = normalize_l1(bsr_matvec(plan.lfwd, a, ca, self.interpret,
+                                     plan.accum_dtype) * m, axis=0)
+        res = np.asarray(jnp.sum(jnp.abs(h2 - h), axis=0))
         a = normalize_l1(a, axis=0)
         return (np.asarray(jnp.take(h, inv_d, axis=0)),
-                np.asarray(jnp.take(a, inv_d, axis=0)), conv)
+                np.asarray(jnp.take(a, inv_d, axis=0)), conv, res)
 
 
 # ------------------------------------------------------- selection/factory

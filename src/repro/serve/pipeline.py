@@ -103,6 +103,7 @@ class _Assembled:
     h: Any = None
     a: Any = None
     conv: Any = None
+    res: Any = None                # per-column residual certificates
 
 
 _DONE = object()
@@ -191,7 +192,8 @@ class ServePipeline:
                     asm.results[slot] = QueryResult(
                         roots=roots_u, nodes=entry.nodes,
                         authority=entry.authority, hub=entry.hub,
-                        iters=0, status="hit", key=key)
+                        iters=0, status="hit", key=key,
+                        residual=entry.residual)
                     continue
                 if key in dup_of:
                     asm.dups.append((slot, dup_of[key]))
@@ -250,8 +252,10 @@ class ServePipeline:
         rank_k = svc.cfg.rank_k if job.rank_k is None else int(job.rank_k)
         asm.batch = SweepBatch(
             h0=h0, src=src, dst=dst, w=w, ca=ca, ch=ch, mask=mask,
-            tol=svc.cfg.tol, max_iter=svc.cfg.max_iter, dtype=svc._dtype,
-            rank_k=rank_k, stable_sweeps=svc.cfg.stable_sweeps)
+            tol=svc._polish_tol, max_iter=svc.cfg.max_iter,
+            dtype=svc._dtype, rank_k=rank_k,
+            stable_sweeps=svc.cfg.stable_sweeps,
+            bulk_dtype=svc._bulk_dtype)
         return asm
 
     def plan(self, asm: _Assembled) -> _Assembled:
@@ -267,7 +271,8 @@ class ServePipeline:
         if asm.batch is None:
             return asm
         with self._sweep_lock:
-            asm.h, asm.a, asm.conv = asm.backend.sweep(asm.plan, asm.batch)
+            asm.h, asm.a, asm.conv, asm.res = \
+                asm.backend.sweep(asm.plan, asm.batch)
         with self._meta_lock:
             self.stats["swept"] += 1
         return asm
@@ -298,15 +303,16 @@ class ServePipeline:
             for j, (slot, fs, _entry) in enumerate(asm.todo):
                 loc = asm.locs[j]
                 auth_j, hub_j = asm.a[loc, j], asm.h[loc, j]
+                res_j = float(asm.res[j])
                 entry = _CacheEntry(nodes=fs.nodes, authority=auth_j,
-                                    hub=hub_j)
+                                    hub=hub_j, residual=res_j)
                 svc._cache_put(fs.key, entry)
                 svc._warm_h[fs.nodes] = hub_j
                 svc._warm_seen[fs.nodes] = True
                 asm.results[slot] = QueryResult(
                     roots=fs.nodes[fs.roots_local], nodes=fs.nodes,
                     authority=auth_j, hub=hub_j, iters=int(asm.conv[j]),
-                    status=asm.statuses[j], key=fs.key)
+                    status=asm.statuses[j], key=fs.key, residual=res_j)
             for slot, owner in asm.dups:  # identical root sets share a col
                 asm.results[slot] = asm.results[owner]
                 svc.stats[asm.results[owner].status] += 1

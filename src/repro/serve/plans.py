@@ -110,6 +110,11 @@ class BsrPlan(SweepPlan):
     ``lt``/``lfwd`` are the transpose/forward DeviceBSR built in the
     permuted space. Per-column diagonals, masks, and start vectors stay
     batch-side (permuted at sweep time, on device).
+
+    ``lt_lo``/``lfwd_lo`` are the precision ladder's low-precision operator
+    copies (same idx arrays, blocks cast to the batch's ``bulk_dtype``) —
+    present only on plans built for a ladder batch, which is why the
+    ladder keys the service plan cache.
     """
 
     perm: object = None  # np (n_pad,) new -> old
@@ -120,6 +125,8 @@ class BsrPlan(SweepPlan):
     lfwd: object = None  # DeviceBSR, forward (hub half-step)
     bs: int = 0
     accum_dtype: object = None
+    lt_lo: object = None    # DeviceBSR at bulk_dtype (None: ladder off)
+    lfwd_lo: object = None
 
 
 class PlanCache:

@@ -114,10 +114,16 @@ class RankQueue:
     """
 
     def __init__(self, service, deadline_ms: float = 5.0,
-                 max_pending: Optional[int] = None, shed_priority: int = 1):
+                 max_pending: Optional[int] = None, shed_priority: int = 1,
+                 dispatch_margin_ms: float = 25.0):
         self.service = service
         self.v_max = service.cfg.v_max
         self.deadline_s = float(deadline_ms) / 1e3
+        # how far ahead of a request's own deadline_at the flush timer
+        # fires, budgeting for dispatch+sweep time — without it a tight
+        # per-request deadline into a quiet queue would sit out the full
+        # queue deadline_ms and miss its SLA before EDF even sees it
+        self.margin_s = float(dispatch_margin_ms) / 1e3
         self.max_pending = (4 * self.v_max if max_pending is None
                             else int(max_pending))
         if self.max_pending < 1:
@@ -204,7 +210,12 @@ class RankQueue:
         t = QueueTicket(key, priority, deadline_at)
         p.tickets.append(t)
         p.priority = min(p.priority, priority)
-        p.deadline_at = min(p.deadline_at, deadline_at)
+        if deadline_at < p.deadline_at:
+            # a tighter deadline joined the column: the dispatcher's flush
+            # timer was derived from the OLD earliest deadline — wake it
+            # so it re-derives the wait
+            p.deadline_at = deadline_at
+            self._cond.notify_all()
         self.stats["coalesced"] += 1
         return t
 
@@ -213,7 +224,8 @@ class RankQueue:
     def _class(self, priority: int) -> dict:
         c = self._class_stats.get(priority)
         if c is None:
-            c = {"submitted": 0, "served": 0, "shed": 0, "lat_ms": []}
+            c = {"submitted": 0, "served": 0, "shed": 0, "failed": 0,
+                 "lat_ms": []}
             self._class_stats[priority] = c
         return c
 
@@ -234,13 +246,15 @@ class RankQueue:
                            iters=0, status="shed", key=key)
 
     def _shed(self, tickets: List[QueueTicket], roots_u: np.ndarray):
+        # shed tickets resolve in microseconds; their ~0ms latencies must
+        # NOT enter the per-class lat_ms window or an overloaded class
+        # would report a BETTER p95 the more of its traffic gets dropped —
+        # the percentile windows are served-only
         self.stats["shed"] += len(tickets)
         res = self._shed_result(roots_u, tickets[0].key)
         for t in tickets:
             t._resolve(res)
-            c = self._class(t.priority)
-            c["shed"] += 1
-            self._lat(c, t)
+            self._class(t.priority)["shed"] += 1
 
     def _evict_sheddable(self) -> bool:
         """Shed the least-urgent sheddable pending column to admit a
@@ -349,6 +363,13 @@ class RankQueue:
             for p in batch:
                 for t in p.tickets:
                     c = self._class(t.priority)
+                    if exc is not None:
+                        # a crashing backend must not count as service:
+                        # failed tickets get their own counter and stay
+                        # out of the latency window (an error in 2ms is
+                        # not a 2ms serve) and the deadline-miss ledger
+                        c["failed"] += 1
+                        continue
                     c["served"] += 1
                     self._lat(c, t)
                     if t.resolved_at > t.deadline_at:
@@ -357,8 +378,9 @@ class RankQueue:
     def snapshot_stats(self) -> dict:
         """A consistent copy of the queue counters plus per-class
         admission/latency summaries (``classes[priority]`` with
-        submitted/served/shed counts and p50/p95 ms over a bounded
-        recent window)."""
+        submitted/served/shed/failed counts and p50/p95 ms over a bounded
+        recent window of SERVED tickets only — shed and failed resolutions
+        never enter the percentile window)."""
         with self._cond:
             out = dict(self.stats)
             classes = {}
@@ -366,7 +388,7 @@ class RankQueue:
                 lat = np.asarray(c["lat_ms"], float)
                 classes[pri] = {
                     "submitted": c["submitted"], "served": c["served"],
-                    "shed": c["shed"],
+                    "shed": c["shed"], "failed": c["failed"],
                     "p50_ms": (float(np.percentile(lat, 50))
                                if lat.size else None),
                     "p95_ms": (float(np.percentile(lat, 95))
@@ -388,10 +410,20 @@ class RankQueue:
                 while True:
                     if self._pending:
                         n = len(self._pending)
+                        now = time.perf_counter()
                         oldest = next(
                             iter(self._pending.values())).submitted_at
-                        wait_s = (oldest + self.deadline_s
-                                  - time.perf_counter())
+                        # flush when EITHER the oldest arrival has waited
+                        # out the queue deadline OR a per-request SLA
+                        # deadline is within the dispatch margin — the
+                        # queue deadline alone would sit a tight-deadline
+                        # submit in an otherwise-quiet queue until its SLA
+                        # was already blown
+                        wait_s = oldest + self.deadline_s - now
+                        edl = min(p.deadline_at
+                                  for p in self._pending.values())
+                        if edl < math.inf:
+                            wait_s = min(wait_s, edl - self.margin_s - now)
                         if n >= self.v_max:
                             reason = "flush_vmax"
                             break
@@ -404,6 +436,8 @@ class RankQueue:
                         if wait_s <= 0:
                             reason = "flush_deadline"
                             break
+                        # coalesces that tighten a deadline_at notify the
+                        # cond, so this wait re-derives after them
                         self._cond.wait(wait_s)
                     elif self._closed:
                         return

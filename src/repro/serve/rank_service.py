@@ -65,6 +65,13 @@ class RankServiceConfig:
     cache_size: int = 512      # LRU entries (root-set hash -> scores)
     warm_min_overlap: float = 0.5  # min score coverage to warm-start
     dtype: object = jnp.float64
+    # precision ladder (serve.backends): a non-empty sweep_dtype ("bf16" |
+    # "fp32" | "f64" and spellings thereof) runs the bulk of convergence
+    # sweeps at that dtype, then polishes at the full sweep dtype to
+    # polish_tol (None: the configured tol) and publishes the residual
+    # certificate on QueryResult.residual. "" keeps the single-phase loop.
+    sweep_dtype: str = ""
+    polish_tol: Optional[float] = None
     backend: str = "dense"     # dense | sharded | bsr | auto (see backends)
     shard_mode: str = "dual_blocked"   # sharded: replicated | dual_blocked
     shard_devices: Optional[int] = None  # sharded: device count (None: all)
@@ -101,6 +108,11 @@ class QueryResult:
     iters: int              # sweeps to convergence (0 for a cache hit)
     status: str             # "hit" | "warm" | "cold" | "shed" (queue only)
     key: str                # root-set hash (the cache key)
+    # residual certificate: ‖sweep(h) − h‖₁ from one extra full-precision
+    # sweep at the published h — the provable convergence bound the
+    # precision ladder (and the legacy loop) publishes. None only for
+    # results cached before certificates existed (old spill records).
+    residual: Optional[float] = None
 
     def topk(self, k: int = 10):
         """Top-k (global node id, authority score) pairs."""
@@ -114,6 +126,7 @@ class _CacheEntry:
     nodes: np.ndarray
     authority: np.ndarray
     hub: np.ndarray
+    residual: Optional[float] = None  # certificate at converge time
 
 
 class RankService:
@@ -131,13 +144,42 @@ class RankService:
             warnings.simplefilter("ignore")  # x64-truncation noise
             eff = jnp.zeros((), self.cfg.dtype).dtype
         self._dtype = eff
-        min_tol = 1e3 * float(jnp.finfo(eff).eps)
+        from .backends import dtype_floor, resolve_sweep_dtype
+        min_tol = dtype_floor(eff)
         if self.cfg.tol < min_tol:
             warnings.warn(
                 f"RankService tol={self.cfg.tol:g} is below the {eff} "
                 f"residual floor (x64 disabled?); clamping to {min_tol:g}",
                 stacklevel=2)
             self.cfg = dataclasses.replace(self.cfg, tol=min_tol)
+        # precision ladder: resolve/validate once; the shared switch-over
+        # criterion (backends.bulk_stop_tol) runs off _bulk_dtype at sweep
+        # time. A ladder whose bulk dtype IS the sweep dtype degenerates to
+        # the single-phase loop — normalize it to None so the trace (and
+        # the plan-cache key) is bit-identical to a ladder-free service.
+        bulk = resolve_sweep_dtype(self.cfg.sweep_dtype)
+        if bulk is not None and bulk == np.dtype(eff):
+            bulk = None
+        if bulk is not None and \
+                jnp.finfo(bulk).eps < float(jnp.finfo(eff).eps):
+            raise ValueError(
+                f"sweep_dtype {bulk} is higher precision than the sweep "
+                f"dtype {eff} — the ladder's bulk phase must be the cheap "
+                f"one")
+        self._bulk_dtype = bulk
+        polish = self.cfg.polish_tol
+        if polish is None:
+            polish = self.cfg.tol
+        else:
+            polish = float(polish)
+            if polish <= 0:
+                raise ValueError(f"polish_tol must be > 0, got {polish}")
+            if polish < min_tol:
+                warnings.warn(
+                    f"polish_tol={polish:g} is below the {eff} residual "
+                    f"floor; clamping to {min_tol:g}", stacklevel=2)
+                polish = min_tol
+        self._polish_tol = polish
         if self.cfg.backend not in ("dense", "sharded", "bsr", "auto"):
             raise ValueError(f"unknown backend {self.cfg.backend!r}")
         if self.cfg.rank_k < 0:
@@ -229,11 +271,14 @@ class RankService:
         (``plan_spilled``).
         """
         skey = batch.structure_key()
-        # stopping params join the key: a plan reused under a different
-        # (rank_k, stable_sweeps) regime must never alias spilled records
-        # or future stopping-aware layouts built for another regime
+        # stopping params AND the precision ladder join the key: a plan
+        # reused under a different (rank_k, stable_sweeps) regime must
+        # never alias spilled records or future stopping-aware layouts
+        # built for another regime, and a ladder plan carries bulk-dtype
+        # operator copies (bsr) a ladder-free plan lacks
         key = (backend.name, backend.plan_params(), skey,
-               (int(batch.rank_k), int(batch.stable_sweeps)))
+               (int(batch.rank_k), int(batch.stable_sweeps),
+                batch.ladder_key()))
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
@@ -436,9 +481,22 @@ class RankService:
 
         The range check runs on the int64 ids BEFORE the int32 downcast:
         downcasting first would wrap ids >= 2^31 (2**32 becomes node 0)
-        and silently validate garbage as a real page.
+        and silently validate garbage as a real page. Likewise the int64
+        cast itself must not invent ids: a float 3.7 would truncate to
+        node 3 and serve the wrong page, and strings/bools/complex are
+        never page ids — only integers and integral floats pass.
         """
-        roots_u = np.unique(np.asarray(roots, np.int64))
+        arr = np.asarray(roots)
+        if arr.dtype.kind == "f":
+            if not np.all(np.isfinite(arr)) or \
+                    not np.array_equal(arr, np.trunc(arr)):
+                raise ValueError(
+                    f"root ids must be integral, got float values "
+                    f"{np.asarray(arr).ravel()[:8]}")
+        elif arr.dtype.kind not in "iu":
+            raise ValueError(
+                f"root ids must be integers, got dtype {arr.dtype}")
+        roots_u = np.unique(arr.astype(np.int64))
         if len(roots_u) == 0:
             raise ValueError("empty root set")
         if roots_u[0] < 0 or roots_u[-1] >= self.g.n_nodes:

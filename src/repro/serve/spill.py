@@ -135,9 +135,14 @@ class PlanSpill:
     ``plan_arrays`` schema (or a device structure it serializes, like
     DeviceBSR's layout) changes meaning, and every stale record reads as
     absent instead of rehydrating into a silently wrong sweep.
+
+    Format history: 2 — the precision ladder joined the service cache key
+    (its third tuple element grew a ladder marker) and the bsr backend's
+    meta gained "bulk"; pre-ladder records must not rehydrate under keys
+    they were never built for.
     """
 
-    FORMAT = 1
+    FORMAT = 2
 
     def __init__(self, spill_dir: str):
         self.dir = os.path.join(spill_dir, "plans")

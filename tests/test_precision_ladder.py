@@ -1,0 +1,211 @@
+"""Precision ladder (ISSUE 7): bulk sweeps at bf16/fp32, certified f64
+refinement.
+
+A service configured with ``sweep_dtype`` runs the bulk of each column's
+convergence at the cheap dtype, switches over when the residual stalls at
+that dtype's floor, and polishes at full precision to ``polish_tol``. The
+contract tested here:
+
+* ladder fixed points match the single-phase f64 service to <=1e-10 L1 on
+  every backend (the device-count axis lives in test_serve_backends.py);
+* a degenerate f64 ladder is normalized away — bit-identical results;
+* every cold result carries a residual certificate that IS the true
+  one-sweep residual at the published vectors (recomputed independently
+  in numpy) and is <= the polish tolerance;
+* the precision params join the plan-cache key and the PlanSpill records,
+  so a ladder service never rehydrates a ladder-free plan (or vice versa);
+* config validation: junk dtypes, a bulk dtype more precise than the
+  sweep dtype, and non-positive polish tolerances are rejected, as are
+  non-integral root ids (the validate_roots bugfix riding along).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.weights import accel_weights
+from repro.graph import WebGraphSpec, generate_webgraph
+from repro.serve import RankService, RankServiceConfig
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generate_webgraph(WebGraphSpec(260, 2000, 0.5, seed=2))
+
+
+@pytest.fixture(scope="module")
+def queries(g):
+    rng = np.random.default_rng(0)
+    return [rng.choice(g.n_nodes, size=4, replace=False) for _ in range(4)]
+
+
+def cfg(**kw):
+    kw.setdefault("v_max", 4)
+    kw.setdefault("tol", 1e-12)
+    return RankServiceConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ref(g, queries):
+    return RankService(g, cfg()).rank(queries)
+
+
+# ------------------------------------------------------------ fixed points
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+@pytest.mark.parametrize("sd", ["bf16", "fp32"])
+def test_ladder_matches_f64_oracle(g, queries, ref, backend, sd):
+    svc = RankService(g, cfg(backend=backend, sweep_dtype=sd))
+    assert svc._bulk_dtype is not None
+    for r, o in zip(svc.rank(queries), ref):
+        assert np.abs(r.authority - o.authority).sum() <= 1e-10
+        assert np.abs(r.hub - o.hub).sum() <= 1e-10
+        assert r.residual is not None
+        assert r.residual <= svc._polish_tol, (backend, sd, r.residual)
+
+
+def test_f64_ladder_is_bit_identical(g, queries, ref):
+    """sweep_dtype == the effective dtype degenerates to the single-phase
+    loop — same trace, bit-for-bit the same published vectors."""
+    for sd in ("f64", "float64", "fp64"):
+        svc = RankService(g, cfg(sweep_dtype=sd))
+        assert svc._bulk_dtype is None  # normalized away
+        for r, o in zip(svc.rank(queries), ref):
+            assert np.array_equal(r.authority, o.authority)
+            assert np.array_equal(r.hub, o.hub)
+            assert r.iters == o.iters
+
+
+# ------------------------------------------------------------- certificate
+
+
+def _true_residual(svc, roots, r):
+    """‖sweep(h_pub) − h_pub‖₁ recomputed from scratch in numpy: one
+    accelerated half-step pair over the query's induced subgraph (for a
+    single-query batch the union IS the subgraph, so the padded-column
+    residual equals the unpadded one — pad rows carry zero mask/weight)."""
+    fs = svc.extractor.extract(roots)
+    assert np.array_equal(fs.nodes, r.nodes)
+    n = fs.n_nodes
+    src, dst = fs.graph.src, fs.graph.dst
+    indeg = np.bincount(dst, minlength=n)
+    outdeg = np.bincount(src, minlength=n)
+    ca, ch = accel_weights(indeg, outdeg)
+    h = np.asarray(r.hub, np.float64)
+    a = np.zeros(n)
+    np.add.at(a, dst, (h * ch)[src])
+    h2 = np.zeros(n)
+    np.add.at(h2, src, (a * ca)[dst])
+    h2 = h2 / np.abs(h2).sum()
+    return np.abs(h2 - h).sum()
+
+
+@pytest.mark.parametrize("sd", ["", "fp32"])
+def test_certificate_is_the_true_residual(g, sd):
+    """The published certificate equals an independent recompute of the
+    one-sweep residual — with and without a ladder. tol is loose enough
+    that the residual is far above roundoff, so rtol actually bites."""
+    svc = RankService(g, cfg(v_max=1, tol=1e-6, sweep_dtype=sd))
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        roots = rng.choice(g.n_nodes, size=5, replace=False)
+        (r,) = svc.rank([roots], refresh=True)
+        assert r.status in ("cold", "warm")
+        assert r.residual is not None and r.residual <= svc._polish_tol
+        res = _true_residual(svc, r.roots, r)
+        assert np.isclose(r.residual, res, rtol=1e-5, atol=1e-12), \
+            (sd, r.residual, res)
+
+
+def test_hit_path_serves_the_stored_certificate(g, queries):
+    svc = RankService(g, cfg(sweep_dtype="fp32"))
+    cold = svc.rank(queries)
+    for r, r2 in zip(cold, svc.rank(queries)):
+        assert r2.status == "hit" and r2.iters == 0
+        assert r2.residual == r.residual  # the converge-time certificate
+
+
+# ------------------------------------------- plan keys + spill no-aliasing
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+def test_ladder_joins_plan_key_and_spill(g, queries, tmp_path, backend):
+    """A fp32-ladder service and a ladder-free service pointed at the same
+    spill directory must never rehydrate each other's plans — the ladder
+    marker is part of the cache key, so the spilled record reads as
+    absent, not as a silently wrong layout (bsr ladder plans carry
+    bulk-dtype operator copies a ladder-free plan lacks)."""
+    d = str(tmp_path / "spill")
+    a = RankService(g, cfg(backend=backend, spill_dir=d))
+    a.rank(queries)
+    sa = a.snapshot_stats()
+    assert sa["plan_misses"] >= 1 and sa["plan_spilled"] >= 1
+
+    # refresh: the restored *vector* spill would otherwise serve hits and
+    # never touch the plan path (those pre-ladder records carry residual
+    # None — also asserted here, it is the documented QueryResult contract)
+    b = RankService(g, cfg(backend=backend, spill_dir=d, sweep_dtype="fp32"))
+    assert all(r.residual is None for r in b.rank(queries))  # spill hits
+    br = b.rank(queries, refresh=True)
+    for r in br:
+        assert r.residual is not None and r.residual <= b._polish_tol
+    sb = b.snapshot_stats()
+    assert sb["plan_restored"] == 0, "ladder service aliased a f64 plan"
+    assert sb["plan_misses"] >= 1
+
+    # same ladder again -> the ladder plan (lo operators included for bsr)
+    # round-trips through the spill, and results still match the oracle
+    c = RankService(g, cfg(backend=backend, spill_dir=d, sweep_dtype="fp32"))
+    for r, o in zip(c.rank(queries, refresh=True), br):
+        assert np.abs(r.authority - o.authority).sum() <= 1e-10
+    sc = c.snapshot_stats()
+    assert sc["plan_restored"] >= 1 and sc["plan_misses"] == 0
+
+
+def test_ladder_and_single_phase_use_distinct_plan_keys(g, queries):
+    """In-memory flavor of the same guarantee: the two regimes populate
+    disjoint plan-cache entries even for identical union subgraphs."""
+    svc = RankService(g, cfg(backend="dense"))
+    svc.rank(queries)
+    lad = RankService(g, cfg(backend="dense", sweep_dtype="bf16"))
+    lad.rank(queries)
+    keys = {k[3][2] for k in svc._plans._plans} | \
+           {k[3][2] for k in lad._plans._plans}
+    assert keys == {"", "bfloat16"}
+
+
+# ------------------------------------------------------- config validation
+
+
+def test_sweep_dtype_rejects_junk_and_inversions(g):
+    with pytest.raises(ValueError):
+        RankService(g, cfg(sweep_dtype="float8"))
+    with pytest.raises(ValueError):  # bulk more precise than the sweep
+        RankService(g, cfg(dtype=np.float32, tol=1e-4, sweep_dtype="f64"))
+    with pytest.raises(ValueError):
+        RankService(g, cfg(polish_tol=-1e-8))
+    with pytest.raises(ValueError):
+        RankService(g, cfg(polish_tol=0.0))
+
+
+def test_polish_tol_clamped_to_dtype_floor(g):
+    with pytest.warns(UserWarning, match="residual floor"):
+        svc = RankService(g, cfg(sweep_dtype="fp32", polish_tol=1e-300))
+    assert svc._polish_tol >= 1e3 * np.finfo(np.float64).eps
+
+
+# ------------------------------------------ validate_roots (bugfix rides)
+
+
+def test_validate_roots_rejects_non_integral(g):
+    svc = RankService(g, cfg())
+    # integral floats are accepted and mean the same pages
+    assert np.array_equal(svc.validate_roots([3.0, 5.0]),
+                          svc.validate_roots([3, 5]))
+    for bad in ([3.7, 5.0],          # would truncate to page 3
+                [np.nan], [np.inf],  # trunc(nan) "equals" nan pre-fix
+                ["3", "5"],          # strings are not page ids
+                np.array([True, False])):  # nor are booleans
+        with pytest.raises(ValueError):
+            svc.validate_roots(bad)

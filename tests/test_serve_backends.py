@@ -53,6 +53,9 @@ def check(label, **kw):
         assert (r.nodes == o.nodes).all(), label
         assert np.abs(r.authority - o.authority).sum() <= 1e-10, label
         assert np.abs(r.hub - o.hub).sum() <= 1e-10, label
+        # every cold result ships a residual certificate <= the polish tol
+        assert r.residual is not None and r.residual <= TOL, \
+            (label, r.residual)
     hits = svc.rank(queries)           # cache-hit path: bit-identical
     for r2, r in zip(hits, cold):
         assert r2.status == "hit" and r2.iters == 0, (label, r2.status)
@@ -87,6 +90,28 @@ assert set(svc.stats["backend_batches"]) <= {"dense", "sharded", "bsr"}
 print("LOCAL OK")
 """
 
+PARITY_LADDER = _PARITY_PRELUDE + r"""
+assert len(jax.devices()) == 8, jax.devices()
+# precision-ladder axis (ISSUE 7): bulk sweeps at a lower dtype + f64
+# polish must land on the same fixed point as the single-phase f64 oracle,
+# on every backend and device count, with a certificate <= tol.
+for sd in ("bfloat16", "float32", "float64"):
+    for s in (1, 2, 4, 8):
+        svc = check(f"ladder/{MODE}/{sd}/{s}", backend="sharded",
+                    shard_mode=MODE, shard_devices=s, sweep_dtype=sd)
+        assert set(svc.stats["backend_batches"]) == {"sharded"}
+    if MODE == "replicated":  # local backends once, not per shard mode
+        check(f"ladder/dense/{sd}", backend="dense", sweep_dtype=sd)
+        check(f"ladder/bsr/{sd}", backend="bsr", sweep_dtype=sd)
+# a degenerate f64 ladder is normalized to single-phase: bit-identical
+svc64 = RankService(g, RankServiceConfig(v_max=4, tol=TOL,
+                                         sweep_dtype="float64"))
+for r, o in zip(svc64.rank(queries), ref_cold):
+    assert np.array_equal(r.authority, o.authority)
+    assert np.array_equal(r.hub, o.hub)
+print("LADDER_PARITY", MODE, "OK")
+"""
+
 LADDER = r"""
 import numpy as np, jax
 jax.config.update("jax_enable_x64", True)
@@ -115,6 +140,10 @@ print("LADDER OK")
     ("sharded_dual_blocked", "MODE='dual_blocked'\n" + PARITY_SHARDED),
     ("local_backends", PARITY_LOCAL),
     ("collective_ladder", LADDER),
+    ("precision_ladder_replicated",
+     "MODE='replicated'\n" + PARITY_LADDER),
+    ("precision_ladder_dual_blocked",
+     "MODE='dual_blocked'\n" + PARITY_LADDER),
 ])
 def test_backend_parity(name, code):
     out = _run(code)

@@ -239,6 +239,79 @@ def test_backlog_degrades_rank_k(g):
     assert q.stats["shed"] == 0  # backpressure only: nothing was dropped
 
 
+# ------------------------------------------- SLA stats bugfixes (ISSUE 7)
+
+
+def test_tight_deadline_wakes_flush_timer(g, queries):
+    """A tight per-request deadline submitted into an otherwise-quiet
+    queue must pull the flush forward: the timer fires dispatch_margin_ms
+    ahead of the request's own deadline_at instead of sitting out the
+    (huge) queue deadline and blowing the SLA before EDF ever ran."""
+    svc = svc_for(g)
+    roots = queries[0]
+    svc.rank([roots])  # pre-converged: the dispatch is a pure cache hit
+    with svc.queue(deadline_ms=60_000) as q:
+        t = q.submit(roots, deadline_ms=250)
+        r = t.result(timeout=120)
+    assert r.status == "hit"
+    assert t.resolved_at <= t.deadline_at, \
+        (t.resolved_at - t.deadline_at, "flush timer ignored the SLA")
+    assert q.stats["deadline_miss"] == 0
+    assert q.stats["flush_deadline"] == 1
+
+
+def test_failed_dispatch_not_counted_served(g, queries):
+    """A crashing backend resolves tickets with the exception — those must
+    land in the per-class ``failed`` counter, not ``served``, and their
+    (meaningless, near-0ms) latencies must stay out of the percentile
+    window and the deadline-miss ledger."""
+    svc = svc_for(g)
+
+    def boom(asm):
+        raise RuntimeError("device fell over")
+
+    svc.pipeline.sweep = boom
+    with svc.queue(deadline_ms=10) as q:
+        t = q.submit(queries[0], deadline_ms=1)
+        time.sleep(0.01)  # resolve lands past the 1ms SLA
+        with pytest.raises(RuntimeError, match="device fell over"):
+            t.result(timeout=120)
+    cls = q.snapshot_stats()["classes"][0]
+    assert cls["failed"] == 1
+    assert cls["served"] == 0
+    assert cls["p50_ms"] is None and cls["p95_ms"] is None
+    assert q.stats["deadline_miss"] == 0  # an error is not a late serve
+
+
+def test_shed_tickets_do_not_pollute_latency_percentiles(g):
+    """Shed resolutions happen in microseconds; counting them as latency
+    samples made an overloaded class report a BETTER p50/p95 the more of
+    its traffic was dropped. The windows are served-only: with 6 sheds
+    and 2 served tickets, the percentiles must equal the served pair's."""
+    rng = np.random.default_rng(29)
+    qs = [rng.choice(g.n_nodes, size=3, replace=False) for _ in range(10)]
+    svc = svc_for(g, pipeline_depth=1, v_max=2)
+    svc_for(g, v_max=2).rank(qs)  # compile warmup
+    q = svc.queue(deadline_ms=60_000, max_pending=2, shed_priority=1)
+    with svc.pipeline._sweep_lock:
+        _stall_dispatcher(svc, q, qs[:2])
+        a = q.submit(qs[2], priority=1)
+        b = q.submit(qs[3], priority=1)          # pending now full
+        shed = [q.submit(x, priority=1) for x in qs[4:10]]
+        assert all(t.done() and t.result().status == "shed" for t in shed)
+    served = [t.result(timeout=120) for t in (a, b)]
+    q.close()
+    assert all(r.status == "cold" for r in served)
+    cls = q.snapshot_stats()["classes"][1]
+    assert cls["served"] == 2 and cls["shed"] == 6
+    lo = min(a.latency_s, b.latency_s) * 1e3
+    hi = max(a.latency_s, b.latency_s) * 1e3
+    # served-only window: percentiles sit inside the served pair's range
+    # (pre-fix the six ~0ms shed samples dragged p50 to ~0)
+    assert cls["p50_ms"] >= lo - 1e-6, (cls, lo)
+    assert cls["p95_ms"] <= hi + 1e-6, (cls, hi)
+
+
 # -------------------------------------------------- queued == sync parity
 
 
