@@ -347,6 +347,51 @@ def overload_axis(rank_k, deadline_ms, n_gadgets=24, max_pending=8):
     return out
 
 
+def stats_endpoint_axis(g, cfg, queries, deadline_ms):
+    """Ops-endpoint leg (ISSUE 8): a ``StatsServer`` composed over a live
+    service + queue — the launcher's ``--stats-port`` wiring — is probed
+    over HTTP *during* a queued burst. ``/healthz`` must answer 200 ok
+    and ``/stats.json`` must parse mid-flight and, after the burst,
+    carry registry counts consistent with the traffic served.
+
+    Returns (healthz_ok, stats_ok, final snapshot).
+    """
+    import json
+    import urllib.request
+
+    from repro.serve import StatsServer
+
+    svc = RankService(g, cfg())
+    with svc.queue(deadline_ms=deadline_ms) as rq:
+        srv = StatsServer(lambda: {"service": svc.telemetry_snapshot(),
+                                   "queue": rq.telemetry_snapshot()},
+                          port=0)
+        try:
+            base = f"http://127.0.0.1:{srv.port}"
+            tickets = [rq.submit(q) for q in queries]
+            # probe while tickets are in flight — the endpoint must render
+            # a consistent snapshot off live, mutating registries
+            with urllib.request.urlopen(base + "/healthz", timeout=30) as r:
+                healthz_ok = r.status == 200 and r.read() == b"ok"
+            with urllib.request.urlopen(base + "/stats.json",
+                                        timeout=30) as r:
+                live = json.loads(r.read())
+            for t in tickets:
+                t.result(timeout=600)
+            with urllib.request.urlopen(base + "/stats.json",
+                                        timeout=30) as r:
+                snap = json.loads(r.read())
+        finally:
+            srv.close()
+    stats_ok = (
+        "queue.submitted" in live["queue"]
+        and snap["queue"]["queue.submitted"] == len(queries)
+        and snap["service"]["service.batches"]
+        == snap["queue"]["queue.batches"] >= 1
+        and snap["service"]["pipeline.stage_ms"]["sweep"]["count"] >= 1)
+    return healthz_ok, stats_ok, snap
+
+
 def precision_axis(g, cfg, queries, smoke):
     """Mixed-precision sweeps with certified f64 refinement (ISSUE 7).
 
@@ -556,6 +601,15 @@ def main():
               f"(evicted {s['shed_evicted']}) degraded={s['degraded']} "
               f"deadline_miss={s['deadline_miss']}")
 
+    # --- ops-endpoint axis: /healthz + /stats.json probed over HTTP
+    # during a live queued burst (ISSUE 8; armed in --smoke)
+    ok_health, ok_stats, ep_snap = stats_endpoint_axis(
+        g, cfg, queries, args.deadline_ms)
+    print(f"serve/stats_endpoint,0,"
+          f"families={len(ep_snap['service']) + len(ep_snap['queue'])} "
+          f"submitted={ep_snap['queue']['queue.submitted']} "
+          f"batches={ep_snap['queue']['queue.batches']}")
+
     # --- precision axis: bf16/fp32 bulk sweeps + certified f64 refinement
     # (ISSUE 7; parity armed in --smoke, per-sweep speedup full runs only)
     prec_l1, cert_max, cert_tol, per_sweep, prec_speed = \
@@ -686,6 +740,12 @@ def main():
           f"vs served-only {sla['p95_lo_served_ms']}ms; class-0 "
           f"{rep0 if rep0 is None else f'{rep0:.1f}'}ms "
           f"vs {sla['p95_hi_ms']:.1f}ms)")
+    # ISSUE 8: the ops endpoint must serve a live, consistent snapshot
+    # while the queue is mid-burst (armed in --smoke)
+    ok_endpoint = ok_health and ok_stats
+    print(f"ACCEPTANCE stats_endpoint: {'PASS' if ok_endpoint else 'FAIL'} "
+          f"(healthz {'200 ok' if ok_health else 'FAIL'}, stats.json "
+          f"{'consistent' if ok_stats else 'INCONSISTENT'})")
     # ISSUE 7: the precision ladder must not change the math — <= 1e-10
     # to the f64 service with every certificate <= the polish tol (armed
     # in --smoke); the bulk dtype must buy >= 2x per-sweep throughput
@@ -711,7 +771,8 @@ def main():
                  and ok_queue and ok_plan_hits and ok_plan_latency
                  and ok_pipe_parity and ok_pipe_speed and ok_early
                  and ok_protect and ok_prompt and ok_collapse
-                 and ok_window and ok_prec_parity and ok_prec_speed) else 1
+                 and ok_window and ok_endpoint
+                 and ok_prec_parity and ok_prec_speed) else 1
 
 
 if __name__ == "__main__":

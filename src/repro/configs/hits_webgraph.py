@@ -41,6 +41,13 @@ class RankingConfig:
     # restart-survivable cache spill (serve.spill.CacheSpill)
     serve_spill_dir: str = ""       # "": in-process cache only
     serve_spill_policy: str = "all"  # all | evict
+    # spill generation GC: newest step_* generations kept per entry
+    # stream (compacted at service init and on queue drain)
+    serve_spill_keep_generations: int = 1
+    # ops endpoint (serve.telemetry.StatsServer via launch.serve_rank):
+    # loopback port for GET /healthz + /stats.json; 0 = ephemeral,
+    # < 0 = disabled
+    serve_stats_port: int = -1
 
 
 CONFIG = RankingConfig()

@@ -8,12 +8,13 @@ Validated in interpret=True mode against ref.py oracles; TPU is the target.
 """
 from .bsr_spmm import bsr_converge_cols, bsr_scaled_matvec, resolve_interpret
 from .ops import (DeviceBSR, bsr_converge, bsr_matvec, build_tiled_segments,
-                  hits_sweep_bsr, pad_empty_rows, pad_messages, seg_aggregate)
+                  classify_exit, hits_sweep_bsr, pad_empty_rows,
+                  pad_messages, seg_aggregate)
 from .seg_matmul import seg_matmul
 
 __all__ = [
     "bsr_scaled_matvec", "bsr_converge_cols", "resolve_interpret",
-    "DeviceBSR", "bsr_converge", "bsr_matvec",
+    "DeviceBSR", "bsr_converge", "bsr_matvec", "classify_exit",
     "build_tiled_segments", "hits_sweep_bsr", "pad_empty_rows",
     "pad_messages", "seg_aggregate", "seg_matmul",
 ]

@@ -139,6 +139,43 @@ def bsr_converge(lt: DeviceBSR, lfwd: DeviceBSR, h0, ca, ch, mask, tol,
     return h, a, conv, res
 
 
+def classify_exit(conv, res, tol: float, max_iter: int, rank_k: int = 0,
+                  stable_sweeps: int = 2):
+    """Per-column convergence exit reasons, classified host-side from what
+    every backend's loop already returns: ``conv`` (sweeps used) and
+    ``res`` (the one-extra-sweep residual certificate at the published
+    vectors).
+
+    The fused loops deliberately do not carry an explicit reason through
+    their ``lax.while_loop`` state (a wider carry would perturb the
+    bit-identity pins the rank_k=0 path holds), so the reason is inferred:
+
+    * ``max_iter``    — the column spent the full budget: neither stopping
+      rule fired.
+    * ``rank_stable`` — rank-stability stopping was armed and the column
+      stopped with its certified residual still above ``tol``: only the
+      top-k-ordering rule can have released it (Peserico & Pretto's
+      rank-before-score convergence, visible in live telemetry).
+    * ``residual``    — the L1 residual reached ``tol`` (with rank_k on,
+      a column whose scores converged before — or in the same sweep as —
+      its ordering stabilized also lands here: the certificate can't tell
+      those apart, and for operations they're the same healthy exit).
+
+    Returns a list of reason strings, one per column of ``conv``.
+    """
+    conv = np.asarray(conv)
+    res = np.asarray(res)
+    out = []
+    for c, r in zip(conv.ravel(), res.ravel()):
+        if int(c) >= int(max_iter):
+            out.append("max_iter")
+        elif rank_k > 0 and float(r) > float(tol):
+            out.append("rank_stable")
+        else:
+            out.append("residual")
+    return out
+
+
 def hits_sweep_bsr(g: Graph, ca=None, ch=None, bs: int = 128,
                    interpret: bool | None = None, dtype=jnp.float32):
     """Accelerated-HITS sweep on the BSR kernel path.

@@ -4,19 +4,31 @@ with a request-generator load loop.
 Simulates the serving workload the ROADMAP names: a stream of root-set
 queries with Zipf-skewed popularity (popular queries repeat — the cache's
 bread and butter), batched V at a time through one traversal. `--frontend
-queued` feeds the stream one request at a time through the async
-micro-batching `RankQueue` (Poisson arrivals via `--arrival-qps`;
-p50/p95 latency reported), and `--spill-dir` persists converged vectors
-so a relaunch serves the previous run's queries warm.
+queued` feeds the stream one request at a time through the SLA-aware
+micro-batching `RankQueue` (Poisson arrivals via `--arrival-qps`,
+priority classes via `--low-pri-frac`, per-request SLAs via `--sla-ms`;
+p50/p95 latency reported per class), and `--spill-dir` persists converged
+vectors so a relaunch serves the previous run's queries warm.
+
+Ops surface (see docs/OPERATIONS.md): `--stats-port` serves `GET
+/healthz` and `GET /stats.json` (the live telemetry registries) on
+loopback for probes and scrapers; in queued mode SIGTERM/SIGINT triggers
+a graceful drain — admission stops, pending best-effort requests resolve
+as shed, guaranteed pending requests are served, the spill is flushed and
+generation-GC'd (`--spill-keep-generations`), and the process exits 0.
 
   PYTHONPATH=src python -m repro.launch.serve_rank --dataset wikipedia \
       --scale 0.5 --requests 200 --v 8
   PYTHONPATH=src python -m repro.launch.serve_rank --frontend queued \
-      --arrival-qps 100 --deadline-ms 5 --spill-dir /tmp/rank_spill
+      --arrival-qps 100 --deadline-ms 5 --spill-dir /tmp/rank_spill \
+      --stats-port 8080
 """
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
+import threading
 import time
 
 import jax
@@ -120,6 +132,16 @@ def main():
                     help="cache spill directory (restart-survivable cache)")
     ap.add_argument("--spill-policy", default=CONFIG.serve_spill_policy,
                     choices=["all", "evict"])
+    ap.add_argument("--spill-keep-generations", type=int,
+                    default=CONFIG.serve_spill_keep_generations,
+                    help="spill GC: newest step_* generations kept per "
+                         "entry stream (compacted at init and on drain)")
+    ap.add_argument("--stats-port", type=int,
+                    default=(CONFIG.serve_stats_port
+                             if CONFIG.serve_stats_port >= 0 else None),
+                    help="serve GET /healthz and /stats.json on this "
+                         "loopback port (0: ephemeral, printed at start; "
+                         "omit to disable)")
     args = ap.parse_args()
 
     from ..graph import WebGraphSpec, generate_webgraph, paper_dataset
@@ -149,7 +171,9 @@ def main():
                                  queue_depth=args.queue_depth,
                                  shed_priority=args.shed_priority,
                                  spill_dir=spill,
-                                 spill_policy=args.spill_policy)
+                                 spill_policy=args.spill_policy,
+                                 spill_keep_generations=args
+                                 .spill_keep_generations)
 
     svc = RankService(g, cfg())
     if args.spill_dir and svc.stats["spill_restored"]:
@@ -162,8 +186,38 @@ def main():
     # warm the compile caches so the loop measures serving, not tracing
     # (on a fresh service so the measured run's cache starts cold)
     RankService(g, cfg(spill=None)).rank(stream[: args.v])
+
+    # ops surface: loopback health/stats endpoint + graceful drain state
+    # (docs/OPERATIONS.md documents both contracts)
+    live_q = [None]  # the queued frontend parks its RankQueue here
+    draining = threading.Event()
+    stats_srv = None
+    if args.stats_port is not None:
+        from ..serve.telemetry import StatsServer
+
+        def _stats():
+            out = {"service": svc.telemetry_snapshot(),
+                   "pipeline_depth": args.pipeline_depth}
+            q = live_q[0]
+            if q is not None:
+                out["queue"] = q.telemetry_snapshot()
+            return out
+
+        def _health():
+            if draining.is_set():
+                return False, "draining"
+            return True, "ok"
+
+        stats_srv = StatsServer(_stats, _health, port=args.stats_port)
+        print(f"stats: GET /healthz /stats.json on "
+              f"127.0.0.1:{stats_srv.port}", flush=True)
+
     lat = None
+    drain_line = None
     if args.frontend == "queued":
+        stop = threading.Event()
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, lambda *_: stop.set())
         # one request at a time through the micro-batching queue, Poisson
         # inter-arrivals — the live-traffic regime the sync path can't see
         gaps = (rng.exponential(1.0 / args.arrival_qps, len(stream))
@@ -171,14 +225,32 @@ def main():
         t0 = time.time()
         sla = args.sla_ms or None
         with svc.queue() as q:
+            live_q[0] = q
+            print(f"serving: queued frontend accepting "
+                  f"{len(stream)} requests", flush=True)
             tickets = []
             for roots, gap in zip(stream, gaps):
+                if stop.is_set():
+                    break
                 if gap:
                     time.sleep(gap)
                 pri = (args.shed_priority
                        if rng.uniform() < args.low_pri_frac else 0)
                 tickets.append(q.submit(roots, priority=pri,
                                         deadline_ms=sla))
+            if stop.is_set():
+                # SIGTERM/SIGINT: stop admission, shed best-effort
+                # pending with status, serve guaranteed pending, flush
+                # + GC the spill — then exit 0 below like a normal run
+                draining.set()
+                d = q.drain()
+                drain_line = (
+                    f"drain: admission stopped after {len(tickets)} "
+                    f"submits, {d['shed']} best-effort shed, "
+                    f"{d['served']} served, spill "
+                    f"{'flushed' if d['spill_flushed'] else 'skipped'} "
+                    f"(gc removed {d['gc_removed']})")
+                print(drain_line, flush=True)
             results = [t.result(timeout=600) for t in tickets]
         dt = time.time() - t0
         lat = np.array([t.latency_s for t in tickets]) * 1e3
@@ -219,7 +291,7 @@ def main():
     print(f"pipeline: depth {args.pipeline_depth}, {ps['jobs']} jobs / "
           f"{ps['swept']} swept, "
           f"{svc.pipeline.overlap_events()} overlapped assembles")
-    if lat is not None:
+    if lat is not None and lat.size:
         print(f"latency: p50 {np.percentile(lat, 50):.1f}ms "
               f"p95 {np.percentile(lat, 95):.1f}ms max {lat.max():.1f}ms")
     if args.spill_dir:
@@ -234,10 +306,15 @@ def main():
             print(f"precision ladder ({args.sweep_dtype} bulk): residual "
                   f"certificates max {max(certs):.2e} over "
                   f"{len(certs)} certified results")
-    r = results[-1]
-    cert = "" if r.residual is None else f" res={r.residual:.1e}"
-    print(f"sample query {r.roots.tolist()} [{r.status}{cert}]: "
-          f"top-{args.topk} authorities {r.topk(args.topk)}")
+    if results:
+        r = results[-1]
+        cert = "" if r.residual is None else f" res={r.residual:.1e}"
+        print(f"sample query {r.roots.tolist()} [{r.status}{cert}]: "
+              f"top-{args.topk} authorities {r.topk(args.topk)}")
+    if stats_srv is not None:
+        stats_srv.close()
+    if drain_line is not None:
+        sys.exit(0)  # a drained run is a successful run
 
 
 if __name__ == "__main__":

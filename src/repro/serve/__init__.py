@@ -9,6 +9,8 @@ from .plans import (BsrPlan, DensePlan, PlanCache, ShardedPlan, SweepPlan,
 from .queue import QueueTicket, RankQueue
 from .rank_service import (QueryResult, RankService, RankServiceConfig)
 from .spill import CacheSpill, PlanSpill
+from .telemetry import (Counter, Gauge, Histogram, MetricsRegistry,
+                        StatsServer)
 
 __all__ = [
     "dequantize_kv", "init_quant_cache", "quant_decode_attention",
@@ -21,4 +23,5 @@ __all__ = [
     "select_backend", "shared_mesh",
     "SweepPlan", "DensePlan", "ShardedPlan", "BsrPlan", "PlanCache",
     "structure_key",
+    "MetricsRegistry", "StatsServer", "Counter", "Gauge", "Histogram",
 ]

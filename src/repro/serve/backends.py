@@ -33,6 +33,14 @@ All backends compute the same fixed point (the parity suite holds them to
 <=1e-10 L1 of the dense oracle), so everything above the interface —
 batching, caching, warm starts, and every later scaling PR — is
 backend-agnostic.
+
+Every backend's loop returns ``(h, a, conv, res)``: per-column sweep
+counts and a one-extra-sweep residual certificate. The serving layer
+turns those into convergence telemetry — ``service.sweep.iters`` and the
+per-column exit reason (``kernels.ops.classify_exit``: residual vs
+rank-stability vs budget exhaustion) — without widening any kernel's
+while-loop carry. See ``docs/ARCHITECTURE.md`` for where backends sit in
+the stack and ``docs/OPERATIONS.md`` for the emitted metrics.
 """
 from __future__ import annotations
 

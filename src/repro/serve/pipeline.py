@@ -140,8 +140,16 @@ class ServePipeline:
         self._run_ids = itertools.count()
         self.trace = deque(maxlen=1024)  # (run, job, stage, t0, t1)
         self._spans = {}  # (run, job) -> {stage: (t0, t1)}, size-bounded
-        self.stats = {"runs": 0, "jobs": 0, "swept": 0, "job_errors": 0,
-                      "overlapped": 0}
+        # counts live in the service's registry (pipeline.* family); the
+        # legacy dict surface stays as an alias view (see serve.telemetry)
+        from .telemetry import LegacyStatsDict
+        reg = service.telemetry
+        self.stats = LegacyStatsDict({
+            k: reg.counter(f"pipeline.{k}")
+            for k in ("runs", "jobs", "swept", "job_errors", "overlapped")})
+        # per-stage wall-time histograms, fed by _traced
+        self._m_stage = {s: reg.histogram("pipeline.stage_ms", s)
+                         for s in _STAGES}
 
     # -- stages -----------------------------------------------------------
 
@@ -176,7 +184,11 @@ class ServePipeline:
             for p in probes:
                 if p[3] is None:
                     by_key.setdefault(p[2], []).append(p)
-            disk = {k: svc._spill.get(k) for k in by_key}
+            disk = {}
+            for k in by_key:
+                t0 = time.perf_counter()
+                disk[k] = svc._spill.get(k)
+                svc._m_spill_read.observe((time.perf_counter() - t0) * 1e3)
             with svc._lock:
                 for k, plist in by_key.items():
                     if disk[k] is None:
@@ -296,10 +308,25 @@ class ServePipeline:
                 svc.stats[s] += 1
         if asm.batch is None:
             return asm.results  # all hits: nothing was swept or mutated
+        from ..kernels.ops import classify_exit
+        reasons = classify_exit(
+            np.asarray(asm.conv)[: len(asm.todo)],
+            np.asarray(asm.res)[: len(asm.todo)],
+            tol=asm.batch.tol, max_iter=asm.batch.max_iter,
+            rank_k=asm.batch.rank_k, stable_sweeps=asm.batch.stable_sweeps)
         with svc._lock:
             svc.stats["sweeps"] += int(asm.conv.max(initial=0))
             bb = svc.stats["backend_batches"]
             bb[asm.backend.name] = bb.get(asm.backend.name, 0) + 1
+            # per-column convergence telemetry: sweep-count distribution
+            # and exit reasons (residual | rank_stable | max_iter) — the
+            # live view of the paper's acceleration claim and the
+            # slow-rank pathology (see docs/OPERATIONS.md)
+            for j in range(len(asm.todo)):
+                svc._m_sweep_iters.observe(int(asm.conv[j]))
+                svc.telemetry.counter("service.exit", reasons[j]).inc()
+            if asm.batch.bulk_dtype is not None:
+                svc._m_ladder.inc()
             for j, (slot, fs, _entry) in enumerate(asm.todo):
                 loc = asm.locs[j]
                 auth_j, hub_j = asm.a[loc, j], asm.h[loc, j]
@@ -333,6 +360,7 @@ class ServePipeline:
             return fn(arg)
         finally:
             t1 = time.perf_counter()
+            self._m_stage[stage].observe((t1 - t0) * 1e3)
             with self._meta_lock:
                 self.trace.append((run_id, j, stage, t0, t1))
                 # incremental overlap accounting: an overlap pair —

@@ -42,6 +42,18 @@ pipeline pulls that stream from its prepare worker, at
 assembly overlap the previous batch's device sweep; the pipeline's sweep
 lock keeps backends from ever seeing concurrent sweeps (including
 ``flush``/``close`` drains on the caller's thread).
+
+**Shutdown.** ``close()`` stops admission and serves everything pending —
+the orderly exit. ``drain()`` is the *operator* exit (what the launcher
+runs on SIGTERM/SIGINT): stop admission, resolve every still-pending
+best-effort column with ``status="shed"`` immediately, serve the
+guaranteed pending, then flush (and generation-GC) the service's spill so
+a successor process restarts warm. Admission, shedding, per-class EDF
+wait and latency all count into the queue's own typed
+``serve.telemetry.MetricsRegistry`` (``self.telemetry``; the legacy
+``stats`` dict is an alias view) — see ``docs/OPERATIONS.md`` for the
+metric reference and drain contract, ``docs/ARCHITECTURE.md`` for where
+the queue sits in the serving stack.
 """
 from __future__ import annotations
 
@@ -134,12 +146,33 @@ class RankQueue:
         self._cond = threading.Condition()
         self._pending: "OrderedDict[str, _Pending]" = OrderedDict()
         self._closed = False
-        self.stats = {"submitted": 0, "coalesced": 0, "batches": 0,
-                      "flush_vmax": 0, "flush_deadline": 0, "flush_drain": 0,
-                      "flush_close": 0, "max_batch": 0,
-                      "shed": 0, "shed_evicted": 0, "deadline_miss": 0,
-                      "degraded": 0}
-        self._class_stats: dict = {}  # priority -> counters + latencies
+        # each queue owns its registry (two queues over one service must
+        # not merge admission counts); the legacy dict is an alias view
+        from .telemetry import LegacyStatsDict, MetricsRegistry
+        reg = self.telemetry = MetricsRegistry()
+        self.stats = LegacyStatsDict({
+            "submitted": reg.counter("queue.submitted"),
+            "coalesced": reg.counter("queue.coalesced"),
+            "batches": reg.counter("queue.batches"),
+            "flush_vmax": reg.counter("queue.flush.vmax"),
+            "flush_deadline": reg.counter("queue.flush.deadline"),
+            "flush_drain": reg.counter("queue.flush.drain"),
+            "flush_close": reg.counter("queue.flush.close"),
+            "max_batch": reg.gauge("queue.max_batch"),
+            "shed": reg.counter("queue.shed"),
+            "shed_evicted": reg.counter("queue.shed_evicted"),
+            "deadline_miss": reg.counter("queue.deadline_miss"),
+            "degraded": reg.counter("queue.degraded"),
+        })
+        self._m_wait = reg.histogram("queue.wait_ms")  # submit -> dispatch
+        reg.gauge("queue.pending")
+        reg.counter("queue.drains")
+        # pre-register the per-class families (label = priority class) so
+        # the metric name set is complete before the first submit
+        for k in ("submitted", "served", "shed", "failed"):
+            reg.counter(f"queue.class.{k}", "0")
+        reg.histogram("queue.class.latency_ms", "0", window=_LAT_WINDOW)
+        self._class_stats: dict = {}  # priority -> metric handles
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="rank-queue-dispatch")
         self._thread.start()
@@ -224,16 +257,16 @@ class RankQueue:
     def _class(self, priority: int) -> dict:
         c = self._class_stats.get(priority)
         if c is None:
-            c = {"submitted": 0, "served": 0, "shed": 0, "failed": 0,
-                 "lat_ms": []}
+            lbl = str(priority)
+            c = {k: self.telemetry.counter(f"queue.class.{k}", lbl)
+                 for k in ("submitted", "served", "shed", "failed")}
+            c["lat"] = self.telemetry.histogram("queue.class.latency_ms",
+                                                lbl, window=_LAT_WINDOW)
             self._class_stats[priority] = c
         return c
 
     def _lat(self, c: dict, t: QueueTicket):
-        lat = c["lat_ms"]
-        lat.append(t.latency_s * 1e3)
-        if len(lat) > _LAT_WINDOW:
-            del lat[: len(lat) - _LAT_WINDOW]
+        c["lat"].observe(t.latency_s * 1e3)
 
     def _shed_result(self, roots_u: np.ndarray, key: str):
         """A ``QueryResult`` carrying the shed verdict: the request's own
@@ -328,6 +361,9 @@ class RankQueue:
             order = sorted(self._pending, key=lambda k: (
                 self._pending[k].deadline_at, self._pending[k].submitted_at))
             batch = [self._pending.pop(k) for k in order[:self.v_max]]
+            now = time.perf_counter()
+            for p in batch:  # EDF wait: column admission -> dispatch
+                self._m_wait.observe((now - p.submitted_at) * 1e3)
             self._cond.notify_all()  # wake backpressured submitters
             return batch
 
@@ -385,16 +421,61 @@ class RankQueue:
             out = dict(self.stats)
             classes = {}
             for pri, c in sorted(self._class_stats.items()):
-                lat = np.asarray(c["lat_ms"], float)
                 classes[pri] = {
-                    "submitted": c["submitted"], "served": c["served"],
-                    "shed": c["shed"], "failed": c["failed"],
-                    "p50_ms": (float(np.percentile(lat, 50))
-                               if lat.size else None),
-                    "p95_ms": (float(np.percentile(lat, 95))
-                               if lat.size else None)}
+                    "submitted": c["submitted"].value,
+                    "served": c["served"].value,
+                    "shed": c["shed"].value, "failed": c["failed"].value,
+                    "p50_ms": c["lat"].percentile(50),
+                    "p95_ms": c["lat"].percentile(95)}
             out["classes"] = classes
             return out
+
+    def telemetry_snapshot(self) -> dict:
+        """The queue registry's full rendering (``/stats.json`` shape);
+        the live pending depth samples into ``queue.pending`` here."""
+        with self._cond:
+            self.telemetry.gauge("queue.pending").set(len(self._pending))
+        return self.telemetry.snapshot()
+
+    def drain(self, flush_spill: bool = True) -> dict:
+        """Operator-grade graceful shutdown (the SIGTERM path): stop
+        admission, *shed* every still-pending best-effort column
+        immediately (their tickets resolve now, ``status="shed"`` — a
+        terminating process must not make best-effort callers wait out a
+        full drain), serve every guaranteed pending column, then flush
+        and generation-GC the service's spill so a successor process
+        restarts warm. Returns a summary dict for the shutdown log:
+        ``{"shed": tickets shed here, "served": tickets served over the
+        queue's lifetime, "spill_flushed": bool, "gc_removed": dirs}``.
+
+        Safe to call more than once (later calls drain nothing new).
+        A column counts as best-effort only if *every* coalesced ticket
+        on it is (its class is the min over its tickets) — a guaranteed
+        submit coalesced onto a sheddable key keeps the column.
+        """
+        shed_tickets = 0
+        with self._cond:
+            self._closed = True
+            victims = [k for k, p in self._pending.items()
+                       if p.priority >= self.shed_priority]
+            for k in victims:
+                p = self._pending.pop(k)
+                shed_tickets += len(p.tickets)
+                self._shed(p.tickets, p.roots)
+            self._cond.notify_all()
+        self._thread.join()   # dispatcher serves the guaranteed pending
+        self.flush()          # anything it left behind
+        self.telemetry.counter("queue.drains").inc()
+        spilled, gc_removed = False, 0
+        if flush_spill and self.service._spill is not None:
+            self.service.flush_spill()
+            gc_removed = self.service.gc_spill()
+            spilled = True
+        with self._cond:
+            served = sum(c["served"].value
+                         for c in self._class_stats.values())
+        return {"shed": shed_tickets, "served": served,
+                "spill_flushed": spilled, "gc_removed": gc_removed}
 
     def _job_stream(self):
         """The dispatcher's job source: block until a flush criterion —

@@ -25,12 +25,27 @@ The convergence loop itself is pluggable (see ``serve.backends``): the
 ``dense`` single-device path, the mesh-``sharded`` path over the
 ``sparse.dist`` edge-sharding ladder, and the Pallas ``bsr`` block-sparse
 path all consume the same padded batch and match each other to <=1e-10 L1.
+Two stopping refinements ride on every backend: a **rank-stability early
+exit** (``rank_k > 0``: a column stops once its top-k authority ordering
+has held ``stable_sweeps`` sweeps — Peserico & Pretto's rank-before-score
+convergence as a serving feature) and a **precision ladder**
+(``sweep_dtype``: bulk sweeps at bf16/fp32, then an f64 polish to
+``polish_tol`` whose one-extra-sweep residual certificate publishes on
+``QueryResult.residual``).
 
 Execution is staged (see ``serve.pipeline``): every batch — whether it
-came from this synchronous ``rank()`` or from the queued frontend — runs
+came from this synchronous ``rank()`` or from the SLA-aware queued
+frontend (``serve.queue.RankQueue`` via ``.queue()``: priority classes,
+per-request deadlines, shedding under overload) — runs
 assemble → plan → sweep → publish through one ``ServePipeline``, which at
 ``pipeline_depth >= 2`` overlaps the next batch's host work with the
 current batch's device sweep.
+
+Every layer counts into one typed ``serve.telemetry.MetricsRegistry``
+(``self.telemetry``; the legacy ``stats`` dict is a live alias view over
+it). ``docs/ARCHITECTURE.md`` is the end-to-end tour of this stack;
+``docs/OPERATIONS.md`` is the operator runbook (every metric, the
+health/stats endpoint, drain semantics, spill GC).
 """
 from __future__ import annotations
 
@@ -97,6 +112,9 @@ class RankServiceConfig:
     # restart-survivable cache spill (serve.spill.CacheSpill):
     spill_dir: Optional[str] = None    # None: in-process cache only
     spill_policy: str = "all"  # all: every converged entry | evict: LRU only
+    # spill generation GC: newest step_* generations kept per entry
+    # stream; init (and queue.drain) compacts the whole spill dir to this
+    spill_keep_generations: int = 1
 
 
 @dataclasses.dataclass
@@ -201,20 +219,54 @@ class RankService:
         # warm table, plan cache): pipeline stages read/write them from
         # the prepare worker and the driving thread concurrently
         self._lock = threading.RLock()
-        self.stats = {"queries": 0, "batches": 0, "hit": 0, "warm": 0,
-                      "cold": 0, "sweeps": 0, "backend_batches": {},
-                      "plan_hits": 0, "plan_misses": 0, "plan_evictions": 0,
-                      "plan_restored": 0, "plan_spilled": 0,
-                      "spill_writes": 0, "spill_hits": 0, "spill_restored": 0}
+        # one typed registry per service (serve.telemetry); the pipeline
+        # shares it. The legacy ``stats`` dict-of-ints surface stays as a
+        # live alias view so existing readers/mutators are unchanged.
+        from .telemetry import LabeledView, LegacyStatsDict, MetricsRegistry
+        reg = self.telemetry = MetricsRegistry()
+        self.stats = LegacyStatsDict({
+            "queries": reg.counter("service.queries"),
+            "batches": reg.counter("service.batches"),
+            "hit": reg.counter("service.cache.hit"),
+            "warm": reg.counter("service.cache.warm"),
+            "cold": reg.counter("service.cache.cold"),
+            "sweeps": reg.counter("service.sweeps"),
+            "backend_batches": LabeledView(reg, "service.backend.batches"),
+            "plan_hits": reg.counter("service.plan.hits"),
+            "plan_misses": reg.counter("service.plan.misses"),
+            "plan_evictions": reg.counter("service.plan.evictions"),
+            "plan_restored": reg.counter("service.plan.restored"),
+            "plan_spilled": reg.counter("service.plan.spilled"),
+            "spill_writes": reg.counter("service.spill.writes"),
+            "spill_hits": reg.counter("service.spill.hits"),
+            "spill_restored": reg.counter("service.spill.restored"),
+            "spill_gc_removed": reg.counter("service.spill.gc_removed"),
+        })
+        # non-legacy families, registered eagerly so names() (and the
+        # runbook consistency test) see the full set before traffic does
+        self._m_sweep_iters = reg.histogram("service.sweep.iters")
+        for reason in ("residual", "rank_stable", "max_iter"):
+            reg.counter("service.exit", reason)
+        if self.cfg.backend != "auto":  # auto resolves per batch
+            reg.counter("service.backend.batches", self.cfg.backend)
+        self._m_ladder = reg.counter("service.ladder.bulk_batches")
+        self._m_spill_read = reg.histogram("service.spill.read_ms")
+        self._m_spill_write = reg.histogram("service.spill.write_ms")
+        reg.gauge("service.cache.entries")
+        reg.gauge("service.plan_cache.entries")
         self._spill = None
         self._plan_spill = None
         self._spill_pending: list = []  # deferred writes (see _drain_spill)
         self._spill_io_lock = threading.Lock()  # serializes disk writes
         if self.cfg.spill_dir is not None:
             from .spill import CacheSpill, PlanSpill
-            self._spill = CacheSpill(self.cfg.spill_dir)
-            self._plan_spill = PlanSpill(self.cfg.spill_dir)
+            keep = self.cfg.spill_keep_generations
+            self._spill = CacheSpill(self.cfg.spill_dir,
+                                     keep_generations=keep)
+            self._plan_spill = PlanSpill(self.cfg.spill_dir,
+                                         keep_generations=keep)
             self._restore_spilled()
+            self.gc_spill()  # compact stale generations + crash droppings
         from .pipeline import ServePipeline
         self.pipeline = ServePipeline(self, depth=self.cfg.pipeline_depth)
 
@@ -406,14 +458,18 @@ class RankService:
             pending, self._spill_pending = self._spill_pending, []
         if not pending:
             return  # don't queue behind another thread's writes for a no-op
+        import time
         written = 0
         with self._spill_io_lock:
             for key, nodes, authority, hub in pending:
+                t0 = time.perf_counter()
                 try:
                     self._spill.put(key, nodes, authority, hub)
                     written += 1
                 except (OSError, ValueError):
-                    pass
+                    continue
+                self._m_spill_write.observe(
+                    (time.perf_counter() - t0) * 1e3)
         if written:
             with self._lock:
                 self.stats["spill_writes"] += written
@@ -440,14 +496,33 @@ class RankService:
         if self._spill is None:
             raise ValueError("no spill_dir configured")
         self._drain_spill()  # deferred evictee writes aren't in the LRU
+        import time
         with self._lock:
             entries = [(k, e.nodes, e.authority, e.hub)
                        for k, e in self._cache.items()]
         with self._spill_io_lock:
             for key, nodes, authority, hub in entries:
+                t0 = time.perf_counter()
                 self._spill.put(key, nodes, authority, hub)
+                self._m_spill_write.observe(
+                    (time.perf_counter() - t0) * 1e3)
         with self._lock:
             self.stats["spill_writes"] += len(entries)
+
+    def gc_spill(self, keep: Optional[int] = None) -> int:
+        """Compact the spill directory: prune each entry stream past its
+        newest ``spill_keep_generations`` (or ``keep``) ``step_*``
+        generations and sweep ``.tmp_*`` crash droppings, for vectors and
+        plans both. Runs at init and on queue drain; counted under
+        ``service.spill.gc_removed``. No-op (0) without a spill dir."""
+        if self._spill is None:
+            return 0
+        with self._spill_io_lock:
+            n = self._spill.gc(keep) + self._plan_spill.gc(keep)
+        if n:
+            with self._lock:
+                self.stats["spill_gc_removed"] += n
+        return n
 
     def clear_result_cache(self):
         """Drop all converged-vector state (LRU entries + the warm-start
@@ -460,18 +535,31 @@ class RankService:
             self._warm_seen[:] = False
 
     def snapshot_stats(self) -> dict:
-        """A consistent copy of the stats counters.
+        """A consistent copy of the stats counters (the legacy key set).
 
-        The live ``stats`` dict is mutated under the service lock by
+        The live ``stats`` view is mutated under the service lock by
         pipeline stages running on the prepare worker and the driving
         thread; client threads (e.g. monitoring loops over a busy
         ``RankQueue``) should read through this accessor instead of
-        iterating the live dict mid-update.
+        iterating the live view mid-update. The full typed registry
+        renders through ``telemetry_snapshot()`` instead.
         """
         with self._lock:
             out = dict(self.stats)
             out["backend_batches"] = dict(self.stats["backend_batches"])
             return out
+
+    def telemetry_snapshot(self) -> dict:
+        """The full registry rendering (counters/gauges as scalars,
+        histograms as count/sum/min/max/p50/p95/p99) — what the
+        ``/stats.json`` endpoint serves for this service. Level gauges
+        (cache sizes) are sampled here, at render time."""
+        with self._lock:
+            self.telemetry.gauge("service.cache.entries").set(
+                len(self._cache))
+            self.telemetry.gauge("service.plan_cache.entries").set(
+                len(self._plans))
+        return self.telemetry.snapshot()
 
     # -- serving ----------------------------------------------------------
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import shutil
 import zipfile
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -44,11 +45,48 @@ def _is_key(name: str) -> bool:
     return len(name) == 40 and all(c in "0123456789abcdef" for c in name)
 
 
-class CacheSpill:
-    """Per-root-set-hash persistence of converged cache entries."""
+def _gc_stream(entry_dir: str, keep: int) -> int:
+    """Generation GC for one checkpoint stream: drop numeric ``step_*``
+    dirs beyond the newest ``keep`` and sweep ``.tmp_*`` droppings a
+    SIGKILL mid-``checkpoint.save`` can leave behind. Non-numeric
+    ``step_*`` dirs (``step_backup``, editor droppings) are foreign data
+    the reader already skips — never deleted. Returns dirs removed."""
+    removed = 0
+    try:
+        names = os.listdir(entry_dir)
+    except OSError:
+        return 0
+    gens = []
+    for name in names:
+        if name.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(entry_dir, name), ignore_errors=True)
+            removed += 1
+            continue
+        if name.startswith("step_"):
+            try:
+                gens.append(int(name[5:]))
+            except ValueError:
+                pass  # foreign step_* dir: skip, don't delete
+    for g in sorted(gens)[:-max(int(keep), 1)]:
+        shutil.rmtree(os.path.join(entry_dir, f"step_{g:010d}"),
+                      ignore_errors=True)
+        removed += 1
+    return removed
 
-    def __init__(self, spill_dir: str):
+
+class CacheSpill:
+    """Per-root-set-hash persistence of converged cache entries.
+
+    ``keep_generations`` bounds how many ``step_*`` generations each
+    entry's stream retains (refresh churn writes a new generation per
+    re-convergence; without a bound a hot key's stream grows forever).
+    ``gc()`` applies the same bound across every stream at once plus
+    sweeps crash droppings — the startup/drain compaction pass.
+    """
+
+    def __init__(self, spill_dir: str, keep_generations: int = 1):
         self.dir = spill_dir
+        self.keep_generations = max(int(keep_generations), 1)
         os.makedirs(spill_dir, exist_ok=True)
 
     def put(self, key: str, nodes: np.ndarray, authority: np.ndarray,
@@ -59,8 +97,27 @@ class CacheSpill:
                 "hub": np.asarray(hub)}
         path = checkpoint.save(entry_dir, gen, tree,
                                extra={"key": key, "n_nodes": len(nodes)})
-        checkpoint.prune(entry_dir, keep=1)
+        checkpoint.prune(entry_dir, keep=self.keep_generations)
         return path
+
+    def gc(self, keep: Optional[int] = None) -> int:
+        """Compact every entry stream to its newest ``keep`` generations
+        (default: ``keep_generations``) and remove ``.tmp_*`` leftovers
+        from interrupted writes — in the spill root and inside each
+        stream. Foreign files and non-numeric ``step_*`` dirs survive.
+        Returns the number of directories removed."""
+        keep = self.keep_generations if keep is None else max(int(keep), 1)
+        removed = 0
+        if not os.path.isdir(self.dir):
+            return 0
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if name.startswith(".tmp_") and os.path.isdir(path):
+                shutil.rmtree(path, ignore_errors=True)
+                removed += 1
+            elif _is_key(name) and os.path.isdir(path):
+                removed += _gc_stream(path, keep)
+        return removed
 
     def get(self, key: str) -> Optional[Dict[str, np.ndarray]]:
         """{"nodes", "authority", "hub"} or None if absent/unreadable."""
@@ -144,8 +201,9 @@ class PlanSpill:
 
     FORMAT = 2
 
-    def __init__(self, spill_dir: str):
+    def __init__(self, spill_dir: str, keep_generations: int = 1):
         self.dir = os.path.join(spill_dir, "plans")
+        self.keep_generations = max(int(keep_generations), 1)
         os.makedirs(self.dir, exist_ok=True)
 
     @staticmethod
@@ -160,8 +218,24 @@ class PlanSpill:
             entry_dir, gen, {k: np.asarray(v) for k, v in arrays.items()},
             extra={"cache_key": repr(cache_key), "meta": meta,
                    "format": self.FORMAT})
-        checkpoint.prune(entry_dir, keep=1)
+        checkpoint.prune(entry_dir, keep=self.keep_generations)
         return path
+
+    def gc(self, keep: Optional[int] = None) -> int:
+        """Same generation GC as ``CacheSpill.gc``, over the plan streams
+        (whose dir names are sha1 hexes of cache keys)."""
+        keep = self.keep_generations if keep is None else max(int(keep), 1)
+        removed = 0
+        if not os.path.isdir(self.dir):
+            return 0
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if name.startswith(".tmp_") and os.path.isdir(path):
+                shutil.rmtree(path, ignore_errors=True)
+                removed += 1
+            elif _is_key(name) and os.path.isdir(path):
+                removed += _gc_stream(path, keep)
+        return removed
 
     def get(self, cache_key: tuple
             ) -> Optional[Tuple[Dict[str, np.ndarray], dict]]:

@@ -353,3 +353,96 @@ def test_restart_across_processes_all_backends(tmp_path):
                            text=True, env=env, cwd=ROOT, timeout=600)
         assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
         assert want in r.stdout
+
+
+# ------------------------------------------- generation GC (ISSUE 8)
+
+
+def _gens(entry_dir):
+    return sorted(n for n in os.listdir(entry_dir) if n.startswith("step_"))
+
+
+def test_gc_prunes_stale_generations_keeps_newest(tmp_path):
+    """A churn-heavy stream compacts to the newest keep generations; the
+    survivor is the latest write, still served."""
+    sp = CacheSpill(str(tmp_path), keep_generations=3)
+    key = root_set_key([4, 8, 15])
+    nodes = np.array([4, 8, 15], np.int32)
+    for i in range(1, 4):  # three refresh generations
+        sp.put(key, nodes, np.full(3, float(i)), np.full(3, float(i)))
+    entry = os.path.join(str(tmp_path), key)
+    assert len(_gens(entry)) == 3
+    assert sp.gc(keep=1) == 2
+    assert _gens(entry) == ["step_0000000003"]
+    assert np.array_equal(sp.get(key)["authority"], np.full(3, 3.0))
+    assert sp.gc(keep=1) == 0  # idempotent once compact
+
+
+def test_put_prunes_inline_to_keep_generations(tmp_path):
+    """keep_generations bounds the stream at write time too — a hot key
+    re-converging forever cannot grow its stream unboundedly."""
+    sp = CacheSpill(str(tmp_path), keep_generations=2)
+    key = root_set_key([1, 2])
+    nodes = np.array([1, 2], np.int32)
+    for i in range(5):
+        sp.put(key, nodes, np.zeros(2) + i, np.zeros(2))
+    assert len(_gens(os.path.join(str(tmp_path), key))) == 2
+
+
+def test_gc_sweeps_tmp_droppings_preserves_foreign(tmp_path):
+    """.tmp_* dirs from a SIGKILL mid-save are removed (spill root and
+    inside streams); foreign files and non-numeric step_* dirs survive."""
+    sp = CacheSpill(str(tmp_path))
+    key = root_set_key([7, 9])
+    nodes = np.array([7, 9], np.int32)
+    sp.put(key, nodes, np.ones(2), np.ones(2))
+    entry = os.path.join(str(tmp_path), key)
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_dead"))
+    os.makedirs(os.path.join(entry, ".tmp_dead2"))
+    os.makedirs(os.path.join(entry, "step_backup"))  # PR-6 invariant
+    with open(os.path.join(str(tmp_path), "notes.txt"), "w") as f:
+        f.write("operator breadcrumb")
+    assert sp.gc() == 2  # exactly the two .tmp_* dirs
+    assert os.path.isdir(os.path.join(entry, "step_backup"))
+    assert os.path.exists(os.path.join(str(tmp_path), "notes.txt"))
+    assert sp.get(key) is not None
+
+
+def test_plan_spill_gc_compacts_plan_streams(tmp_path):
+    from repro.serve import PlanSpill
+
+    ps = PlanSpill(str(tmp_path), keep_generations=3)
+    key = ("dense", ("p",), "deadbeef")
+    for i in range(3):
+        ps.put(key, {"edges": np.arange(4) + i}, {"gen": i})
+    assert ps.gc(keep=1) == 2
+    arrays, meta = ps.get(key)
+    assert np.array_equal(arrays["edges"], np.arange(4) + 2)
+    assert meta["gen"] == 2
+
+
+def test_service_init_gc_compacts_and_counts(tmp_path, g, queries):
+    """A restarted service with a tighter keep bound compacts the old
+    process's generations at init (counted in spill_gc_removed) and still
+    serves the spilled entries as hits."""
+    cfg = dict(v_max=4, tol=TOL, spill_dir=str(tmp_path))
+    a = RankService(g, RankServiceConfig(spill_keep_generations=3, **cfg))
+    a.rank(queries[:3])
+    a.clear_result_cache()   # force re-convergence -> a second generation
+    a.rank(queries[:3])
+    a.flush_spill()
+    keys = CacheSpill(str(tmp_path)).keys()
+    assert any(len(_gens(os.path.join(str(tmp_path), k))) > 1 for k in keys)
+    b = RankService(g, RankServiceConfig(spill_keep_generations=1, **cfg))
+    assert b.stats["spill_gc_removed"] >= 1
+    assert b.telemetry.counter("service.spill.gc_removed").value \
+        == b.stats["spill_gc_removed"]
+    for k in keys:
+        assert len(_gens(os.path.join(str(tmp_path), k))) == 1
+    rs = b.rank(queries[:3])
+    assert all(r.status == "hit" for r in rs)
+
+
+def test_invalid_keep_generations_clamped(tmp_path):
+    assert CacheSpill(str(tmp_path), keep_generations=0).keep_generations == 1
+    assert CacheSpill(str(tmp_path), keep_generations=-5).keep_generations == 1
