@@ -392,6 +392,49 @@ def stats_endpoint_axis(g, cfg, queries, deadline_ms):
     return healthz_ok, stats_ok, snap
 
 
+def delta_swap_axis(g, cfg, queries, deadline_ms):
+    """Zero-downtime edge-delta roll (ISSUE 9; armed in --smoke).
+
+    Live guaranteed traffic through the queue, then the operator roll:
+    drain -> ``apply_edge_delta`` (a reweight inside query 0's union, so
+    the delta provably changes what that query serves) -> undrain ->
+    resubmit the whole stream. Gates: zero guaranteed-class sheds across
+    the roll, at least one plan *patched* in place with
+    ``service.plan.misses`` unmoved (weight-only deltas must not rebuild
+    surviving layouts), and every post-delta result <= 1e-10 L1 of a
+    cold-built oracle service that never saw the pre-delta graph.
+    """
+    svc = RankService(g, cfg())
+    with svc.queue(deadline_ms=deadline_ms) as rq:
+        pre = [rq.submit(q) for q in queries]  # all guaranteed class
+        for t in pre:
+            t.result(timeout=600)
+        fs = svc.extractor.extract(queries[0])
+        u = int(fs.nodes[fs.graph.src[0]])
+        v = int(fs.nodes[fs.graph.dst[0]])
+        misses_before = svc.stats["plan_misses"]
+        t0 = time.perf_counter()
+        rq.drain(flush_spill=False)
+        summ = svc.apply_edge_delta(reweights=[(u, v, 2.0)])
+        rq.undrain()
+        roll_ms = (time.perf_counter() - t0) * 1e3
+        post = [t.result(timeout=600)
+                for t in [rq.submit(q) for q in queries]]
+        stats = rq.snapshot_stats()
+    patched = svc.telemetry_snapshot()["service.delta.patched"]
+    built = svc.stats["plan_misses"] - misses_before
+
+    oracle = RankService(g, cfg())
+    oracle.apply_edge_delta(reweights=[(u, v, 2.0)])
+    l1 = max(float(np.abs(a.authority - b.authority).sum())
+             for a, b in zip(post, oracle.rank(queries)))
+    shed0 = stats["classes"].get(0, {}).get("shed", -1)
+    return {"l1": l1, "patched": patched, "built": built,
+            "invalidated": summ["invalidated"], "swap_ms": summ["swap_ms"],
+            "roll_ms": roll_ms, "shed0": shed0,
+            "served0": stats["classes"].get(0, {}).get("served", 0)}
+
+
 def precision_axis(g, cfg, queries, smoke):
     """Mixed-precision sweeps with certified f64 refinement (ISSUE 7).
 
@@ -610,6 +653,13 @@ def main():
           f"submitted={ep_snap['queue']['queue.submitted']} "
           f"batches={ep_snap['queue']['queue.batches']}")
 
+    # --- delta-swap axis: a zero-downtime drain -> swap -> undrain roll
+    # under live guaranteed traffic (ISSUE 9; armed in --smoke)
+    ds = delta_swap_axis(g, cfg, queries, args.deadline_ms)
+    print(f"serve/delta_swap,0,patched={ds['patched']} built={ds['built']} "
+          f"invalidated={ds['invalidated']} swap_ms={ds['swap_ms']:.1f} "
+          f"roll_ms={ds['roll_ms']:.1f} class0_shed={ds['shed0']}")
+
     # --- precision axis: bf16/fp32 bulk sweeps + certified f64 refinement
     # (ISSUE 7; parity armed in --smoke, per-sweep speedup full runs only)
     prec_l1, cert_max, cert_tol, per_sweep, prec_speed = \
@@ -746,6 +796,15 @@ def main():
     print(f"ACCEPTANCE stats_endpoint: {'PASS' if ok_endpoint else 'FAIL'} "
           f"(healthz {'200 ok' if ok_health else 'FAIL'}, stats.json "
           f"{'consistent' if ok_stats else 'INCONSISTENT'})")
+    # ISSUE 9: a weight-only delta rolled under live traffic must serve
+    # post-delta-correct results (<= 1e-10 vs a cold-built service)
+    # without rebuilding surviving plans and without shedding a single
+    # guaranteed-class request across the drain -> undrain gap
+    ok_delta = (ds["l1"] <= 1e-10 and ds["patched"] >= 1
+                and ds["built"] == 0 and ds["shed0"] == 0)
+    print(f"ACCEPTANCE delta_swap: {'PASS' if ok_delta else 'FAIL'} "
+          f"(l1 {ds['l1']:.2e}, {ds['patched']} patched / {ds['built']} "
+          f"rebuilt, class-0 shed {ds['shed0']})")
     # ISSUE 7: the precision ladder must not change the math — <= 1e-10
     # to the f64 service with every certificate <= the polish tol (armed
     # in --smoke); the bulk dtype must buy >= 2x per-sweep throughput
@@ -771,7 +830,7 @@ def main():
                  and ok_queue and ok_plan_hits and ok_plan_latency
                  and ok_pipe_parity and ok_pipe_speed and ok_early
                  and ok_protect and ok_prompt and ok_collapse
-                 and ok_window and ok_endpoint
+                 and ok_window and ok_endpoint and ok_delta
                  and ok_prec_parity and ok_prec_speed) else 1
 
 

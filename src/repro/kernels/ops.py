@@ -56,6 +56,38 @@ class DeviceBSR:
                          bs, g.n_nodes, bsr.n_padded)
 
 
+def bsr_revalue(idx: np.ndarray, bs: int, n_pad: int, src: np.ndarray,
+                dst: np.ndarray, vals: np.ndarray,
+                dtype=np.float64) -> np.ndarray | None:
+    """Re-scatter new edge values into an existing BSR block layout.
+
+    ``idx`` is a DeviceBSR's (nblocks, 2) (brow, bcol) table — sorted
+    lexicographically, which ``pad_empty_rows`` guarantees (per-row blocks
+    come bcol-sorted out of ``to_bsr``'s unique pass; padding rows get a
+    single bcol=0 block; the final sort is brow-stable). ``src``/``dst``/
+    ``vals`` are the edges in the layout's own (permuted) node space.
+
+    Returns the new (nblocks, bs, bs) host block array, or None when an
+    edge falls in a block absent from the layout — the caller must then
+    rebuild the structure rather than patch it. This is the value-only
+    half of a weight delta: the blocking permutation, idx table, and
+    kernel grid all survive untouched.
+    """
+    idx = np.asarray(idx)
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    nbr = n_pad // bs
+    ikey = idx[:, 0].astype(np.int64) * nbr + idx[:, 1]
+    bkey = (src // bs) * nbr + (dst // bs)
+    pos = np.searchsorted(ikey, bkey)
+    if bkey.size and (np.any(pos >= len(ikey))
+                      or np.any(ikey[np.minimum(pos, len(ikey) - 1)] != bkey)):
+        return None
+    blocks = np.zeros((len(ikey), bs, bs), dtype)
+    np.add.at(blocks, (pos, src % bs, dst % bs), np.asarray(vals, dtype))
+    return blocks
+
+
 def bsr_matvec(dbsr: DeviceBSR, x, cin=None, interpret: bool | None = None,
                accum_dtype=jnp.float32):
     """y = A @ (x * cin). x: (N,) | (N, V); cin: None | (N,) shared diagonal

@@ -15,7 +15,10 @@ Ops surface (see docs/OPERATIONS.md): `--stats-port` serves `GET
 loopback for probes and scrapers; in queued mode SIGTERM/SIGINT triggers
 a graceful drain — admission stops, pending best-effort requests resolve
 as shed, guaranteed pending requests are served, the spill is flushed and
-generation-GC'd (`--spill-keep-generations`), and the process exits 0.
+generation-GC'd (`--spill-keep-generations`), and the process exits 0;
+SIGHUP (with `--delta-file`) rolls an edge changeset in without a
+restart — drain, `apply_edge_delta`, undrain — so guaranteed traffic
+never drops across a graph mutation.
 
   PYTHONPATH=src python -m repro.launch.serve_rank --dataset wikipedia \
       --scale 0.5 --requests 200 --v 8
@@ -36,6 +39,44 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
+
+
+def load_delta_file(path: str) -> dict:
+    """Parse a JSON edge-changeset spec: ``{"adds": [[s, d, w?], ...],
+    "removes": [[s, d], ...], "reweights": [[s, d, w], ...]}`` (all keys
+    optional). Validation of ids/weights happens in ``apply_edge_delta``."""
+    import json
+    with open(path) as f:
+        spec = json.load(f)
+    unknown = set(spec) - {"adds", "removes", "reweights"}
+    if unknown:
+        raise ValueError(f"delta file {path}: unknown keys "
+                         f"{sorted(unknown)}")
+    return {k: spec.get(k) for k in ("adds", "removes", "reweights")}
+
+
+def roll_delta(svc, q, delta: dict, draining=None):
+    """Zero-downtime edge-delta roll: drain -> swap -> undrain.
+
+    Stops admission and serves every guaranteed pending request
+    (``q.drain`` — best-effort pending resolves as shed, nothing
+    guaranteed is dropped), applies the edge changeset while the service
+    is quiescent, then re-opens admission (``q.undrain``). ``draining``
+    (an optional threading.Event) is held set for the duration so
+    ``/healthz`` reports the roll. Returns (drain_summary,
+    delta_summary)."""
+    if draining is not None:
+        draining.set()
+    try:
+        d = q.drain(flush_spill=True)
+        s = svc.apply_edge_delta(adds=delta.get("adds"),
+                                 removes=delta.get("removes"),
+                                 reweights=delta.get("reweights"))
+        q.undrain()
+    finally:
+        if draining is not None:
+            draining.clear()
+    return d, s
 
 
 def zipf_query_stream(rng, n_nodes: int, n_queries: int, roots_per_query: int,
@@ -136,6 +177,11 @@ def main():
                     default=CONFIG.serve_spill_keep_generations,
                     help="spill GC: newest step_* generations kept per "
                          "entry stream (compacted at init and on drain)")
+    ap.add_argument("--delta-file", default=None,
+                    help="JSON edge changeset ({adds: [[s,d,w?]..], "
+                         "removes: [[s,d]..], reweights: [[s,d,w]..]}); "
+                         "queued frontend applies it on SIGHUP via a "
+                         "zero-downtime drain -> swap -> undrain roll")
     ap.add_argument("--stats-port", type=int,
                     default=(CONFIG.serve_stats_port
                              if CONFIG.serve_stats_port >= 0 else None),
@@ -218,6 +264,13 @@ def main():
         stop = threading.Event()
         for sig in (signal.SIGTERM, signal.SIGINT):
             signal.signal(sig, lambda *_: stop.set())
+        # SIGHUP rolls the --delta-file changeset in without a restart:
+        # drain -> apply_edge_delta -> undrain (docs/OPERATIONS.md)
+        roll = threading.Event()
+        delta_spec = (load_delta_file(args.delta_file)
+                      if args.delta_file else None)
+        if delta_spec is not None and hasattr(signal, "SIGHUP"):
+            signal.signal(signal.SIGHUP, lambda *_: roll.set())
         # one request at a time through the micro-batching queue, Poisson
         # inter-arrivals — the live-traffic regime the sync path can't see
         gaps = (rng.exponential(1.0 / args.arrival_qps, len(stream))
@@ -232,6 +285,15 @@ def main():
             for roots, gap in zip(stream, gaps):
                 if stop.is_set():
                     break
+                if roll.is_set():
+                    roll.clear()
+                    d, ds = roll_delta(svc, q, delta_spec, draining)
+                    print(f"delta roll: drained ({d['served']} served, "
+                          f"{d['shed']} best-effort shed), "
+                          f"{ds['invalidated']} cache entries invalidated, "
+                          f"structural={ds['structural']}, swap "
+                          f"{ds['swap_ms']:.1f}ms, admission re-opened",
+                          flush=True)
                 if gap:
                     time.sleep(gap)
                 pri = (args.shed_priority

@@ -57,7 +57,7 @@ from ..core.hits import EdgeList, hits_sweep_cols
 from ..core.reordering import blocking_permutation
 from ..graph.structure import Graph
 from ..kernels.bsr_spmm import resolve_interpret
-from ..kernels.ops import DeviceBSR, bsr_converge, bsr_matvec
+from ..kernels.ops import DeviceBSR, bsr_converge, bsr_matvec, bsr_revalue
 from ..sparse.dist import (build_edge_shards_cols,
                            collective_bytes_per_sweep_cols,
                            device_put_edge_args_cols,
@@ -222,6 +222,20 @@ class SweepBackend:
         callers treat any failure as a rebuild)."""
         raise NotImplementedError
 
+    def patch(self, plan: SweepPlan, batch: SweepBatch,
+              key: str = "") -> Optional[SweepPlan]:
+        """Value-only update: a plan for ``batch`` built from ``plan``.
+
+        ``plan`` and ``batch`` share a ``plans.topology_key`` — same padded
+        endpoints, different edge weights (an edge-weight delta). Backends
+        that can reuse the old plan's layout (device edge lists, blocking
+        permutation, block index tables) return the patched plan, keyed by
+        ``key`` (the batch's new structure_key); backends whose layout
+        bakes the weights in — or any case where the old layout can't hold
+        the new values — return None and the caller does a full replan.
+        """
+        return None
+
     def _check(self, plan: SweepPlan, batch: SweepBatch):
         # cheap structural guard (the full content hash already gated the
         # cache lookup; re-hashing here would double the host cost)
@@ -334,6 +348,14 @@ class DenseSweepBackend(SweepBackend):
                          src=jnp.asarray(arrays["src"]),
                          dst=jnp.asarray(arrays["dst"]),
                          w=jnp.asarray(arrays["w"]))
+
+    def patch(self, plan: DensePlan, b: SweepBatch,
+              key: str = "") -> DensePlan:
+        # the endpoints are already on device; only the weight array ships
+        self._check(plan, b)
+        return DensePlan(key=key or b.structure_key(), backend=self.name,
+                         n_pad=plan.n_pad, src=plan.src, dst=plan.dst,
+                         w=jnp.asarray(b.w, b.dtype))
 
     def sweep(self, plan: DensePlan, b: SweepBatch):
         self._check(plan, b)
@@ -658,6 +680,47 @@ class BsrSweepBackend(SweepBackend):
                        perm=perm, inv=inv, perm_dev=jnp.asarray(perm),
                        inv_dev=jnp.asarray(inv), lt=lt, lfwd=lfwd, bs=bs,
                        accum_dtype=accum, lt_lo=lt_lo, lfwd_lo=lfwd_lo)
+
+    def patch(self, plan: BsrPlan, b: SweepBatch,
+              key: str = "") -> Optional[BsrPlan]:
+        """Weight-only update keeping the blocking permutation and block
+        layout: re-scatter the new edge values into the existing idx
+        tables (``kernels.ops.bsr_revalue``) and rebuild only the device
+        block arrays. The permutation, index tables, and kernel grid all
+        survive, so a patched plan hits the same compiled sweep. Returns
+        None when any retained edge falls outside the old block layout
+        (e.g. a weight moved off zero on an edge the old plan dropped) —
+        the caller replans."""
+        self._check(plan, b)
+        real = np.asarray(b.w) != 0  # drop sentinel padding edges
+        src, dst = np.asarray(b.src)[real], np.asarray(b.dst)[real]
+        w = np.asarray(b.w)[real]
+        inv = np.asarray(plan.inv)
+        ps, pd = inv[src], inv[dst]
+        bs = plan.bs
+        # lt was built transposed (Graph.reverse swaps endpoints)
+        lt_blocks = bsr_revalue(plan.lt.idx, bs, plan.lt.n_pad, pd, ps, w)
+        lfwd_blocks = bsr_revalue(plan.lfwd.idx, bs, plan.lfwd.n_pad,
+                                  ps, pd, w)
+        if lt_blocks is None or lfwd_blocks is None:
+            return None
+        lt = DeviceBSR(jnp.asarray(lt_blocks, b.dtype), plan.lt.idx, bs,
+                       plan.lt.n_nodes, plan.lt.n_pad)
+        lfwd = DeviceBSR(jnp.asarray(lfwd_blocks, b.dtype), plan.lfwd.idx,
+                         bs, plan.lfwd.n_nodes, plan.lfwd.n_pad)
+        lt_lo = lfwd_lo = None
+        if b.bulk_dtype is not None:
+            bd = np.dtype(b.bulk_dtype)
+            lt_lo = DeviceBSR(lt.blocks.astype(bd), lt.idx, bs,
+                              lt.n_nodes, lt.n_pad)
+            lfwd_lo = DeviceBSR(lfwd.blocks.astype(bd), lfwd.idx, bs,
+                                lfwd.n_nodes, lfwd.n_pad)
+        return BsrPlan(
+            key=key or b.structure_key(), backend=self.name,
+            n_pad=plan.n_pad, perm=plan.perm, inv=plan.inv,
+            perm_dev=plan.perm_dev, inv_dev=plan.inv_dev,
+            lt=lt, lfwd=lfwd, bs=bs, accum_dtype=plan.accum_dtype,
+            lt_lo=lt_lo, lfwd_lo=lfwd_lo)
 
     def sweep(self, plan: BsrPlan, b: SweepBatch):
         self._check(plan, b)

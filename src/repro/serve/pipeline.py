@@ -232,7 +232,11 @@ class ServePipeline:
         w = np.zeros(e_pad)
         src[:e_u] = union.graph.src
         dst[:e_u] = union.graph.dst
-        w[:e_u] = 1.0
+        # service-held per-pair edge weights (None until the first
+        # apply_edge_delta reweight — the legacy all-1.0 fill keeps
+        # pre-delta structure hashes bit-identical)
+        uw = svc._union_weights(nodes_u, union.graph.src, union.graph.dst)
+        w[:e_u] = 1.0 if uw is None else uw
 
         ca = np.zeros((n_pad, V))
         ch = np.zeros((n_pad, V))

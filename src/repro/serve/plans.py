@@ -56,6 +56,28 @@ def structure_key(src, dst, w, n_pad: int, dtype) -> str:
     return hsh.hexdigest()
 
 
+def topology_key(src, dst, n_pad: int, dtype) -> str:
+    """Weight-blind twin of ``structure_key``.
+
+    Hashes everything a plan's *layout* depends on — padded node count,
+    dtype, and the sentinel-padded endpoint arrays — but not the edge
+    values. Two batches share this key iff they differ at most in edge
+    weights, i.e. iff a cached plan for one is patchable into a plan for
+    the other (``SweepBackend.patch``): the device edge lists, shard
+    bucketing, and BSR blocking permutation are all functions of the
+    endpoints alone.
+    """
+    hsh = hashlib.sha1()
+    hsh.update(b"topo:")
+    hsh.update(np.int64(n_pad).tobytes())
+    hsh.update(str(np.dtype(dtype)).encode())
+    for arr in (src, dst):
+        a = np.ascontiguousarray(arr)
+        hsh.update(str(a.dtype).encode())
+        hsh.update(a.tobytes())
+    return hsh.hexdigest()
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
     """Base: what every backend's structural artifact carries.
@@ -152,6 +174,14 @@ class PlanCache:
         self._plans.move_to_end(key)
         self.stats["hits"] += 1
         return plan
+
+    def peek(self, key: Optional[tuple]) -> Optional[SweepPlan]:
+        """Hit/miss- and LRU-neutral lookup. The delta patch path probes
+        for a predecessor plan with this; a failed probe is not a cache
+        miss in the ledger's sense (the real key's get/build follows)."""
+        if key is None:
+            return None
+        return self._plans.get(key)
 
     def put(self, key: tuple, plan: SweepPlan):
         if self.capacity <= 0:

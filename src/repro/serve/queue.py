@@ -167,6 +167,7 @@ class RankQueue:
         self._m_wait = reg.histogram("queue.wait_ms")  # submit -> dispatch
         reg.gauge("queue.pending")
         reg.counter("queue.drains")
+        reg.counter("queue.undrains")
         # pre-register the per-class families (label = priority class) so
         # the metric name set is complete before the first submit
         for k in ("submitted", "served", "shed", "failed"):
@@ -476,6 +477,30 @@ class RankQueue:
                          for c in self._class_stats.values())
         return {"shed": shed_tickets, "served": served,
                 "spill_flushed": spilled, "gc_removed": gc_removed}
+
+    def undrain(self) -> bool:
+        """Re-open admission after a ``drain()`` (or ``close()``) — the
+        second half of a zero-downtime roll: drain, mutate the service
+        (``apply_edge_delta``), undrain. Resets the closed flag and starts
+        a fresh dispatcher thread (the old one exited at drain); pending
+        state is empty by construction, counters and per-class windows
+        carry over. Returns True if admission was re-opened, False if the
+        queue was already open. Raises if the old dispatcher is still
+        draining (a ``close(wait=False)`` not yet finished).
+        """
+        with self._cond:
+            if not self._closed:
+                return False
+            if self._thread.is_alive():
+                raise RuntimeError(
+                    "dispatcher still draining; finish drain() or "
+                    "close(wait=True) before undrain()")
+            self._closed = False
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="rank-queue-dispatch")
+            self._thread.start()
+        self.telemetry.counter("queue.undrains").inc()
+        return True
 
     def _job_stream(self):
         """The dispatcher's job source: block until a flush criterion —

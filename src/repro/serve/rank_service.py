@@ -60,7 +60,8 @@ import numpy as np
 from ..graph.structure import Graph
 from ..graph.subgraph import FocusedSubgraph, SubgraphExtractor
 from .backends import SweepBackend, SweepBatch, make_backend, select_backend
-from .plans import PlanCache, SweepPlan
+from .delta import EdgeDelta, apply_to_graph, lookup_weights
+from .plans import PlanCache, SweepPlan, topology_key
 
 
 @dataclasses.dataclass
@@ -254,6 +255,20 @@ class RankService:
         self._m_spill_write = reg.histogram("service.spill.write_ms")
         reg.gauge("service.cache.entries")
         reg.gauge("service.plan_cache.entries")
+        # live edge-delta rolls (apply_edge_delta / the lazy plan patching
+        # it arms): plans value-patched vs fully replanned, result-cache
+        # entries invalidated, and the swap's wall time
+        self._m_delta_patched = reg.counter("service.delta.patched")
+        self._m_delta_replanned = reg.counter("service.delta.replanned")
+        self._m_delta_invalidated = reg.counter("service.delta.invalidated")
+        self._m_delta_swap = reg.histogram("service.delta.swap_ms")
+        # per-pair edge weights, None until the first delta (all-1.0 —
+        # keeps every pre-delta structure hash and code path bit-identical)
+        self._edge_table = None
+        # weight-blind plan index: topo key -> the newest full cache key
+        # with that topology, so a post-reweight batch can patch the
+        # predecessor plan instead of rebuilding (see _plan_for)
+        self._topo_index: Dict[tuple, tuple] = {}
         self._spill = None
         self._plan_spill = None
         self._spill_pending: list = []  # deferred writes (see _drain_spill)
@@ -328,19 +343,45 @@ class RankService:
         # never alias spilled records or future stopping-aware layouts
         # built for another regime, and a ladder plan carries bulk-dtype
         # operator copies (bsr) a ladder-free plan lacks
-        key = (backend.name, backend.plan_params(), skey,
-               (int(batch.rank_k), int(batch.stable_sweeps),
-                batch.ladder_key()))
+        stop = (int(batch.rank_k), int(batch.stable_sweeps),
+                batch.ladder_key())
+        key = (backend.name, backend.plan_params(), skey, stop)
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
                 self.stats["plan_hits"] += 1
+                return plan
+        # weight-blind probe: an edge-weight delta changed skey but not the
+        # topology — a same-topology predecessor plan's layout (device edge
+        # lists, shard buckets, BSR blocking) can be value-patched instead
+        # of rebuilt. The probe is hit/miss-neutral; only a successful
+        # patch counts (service.delta.patched), a failed one falls through
+        # to the normal rebuild (service.delta.replanned).
+        tkey = (backend.name, backend.plan_params(),
+                topology_key(batch.src, batch.dst, batch.h0.shape[0],
+                             batch.dtype), stop)
+        with self._lock:
+            old_key = self._topo_index.get(tkey)
+            old_plan = (self._plans.peek(old_key)
+                        if old_key is not None and old_key != key else None)
+        had_predecessor = old_plan is not None
+        if old_plan is not None:
+            plan = backend.patch(old_plan, batch, skey)
+            if plan is not None:
+                with self._lock:
+                    self._plans.put(key, plan)
+                    self._topo_index[tkey] = key
+                    self._m_delta_patched.inc()
+                    self.stats["plan_evictions"] = \
+                        self._plans.stats["evictions"]
+                self._spill_plan(backend, key, plan)
                 return plan
         if self._plan_spill is not None:  # disk before rebuild (restart)
             plan = self._restore_plan(backend, key, skey)
             if plan is not None:
                 with self._lock:
                     self._plans.put(key, plan)
+                    self._topo_index[tkey] = key
                     self.stats["plan_restored"] += 1
                     self.stats["plan_evictions"] = \
                         self._plans.stats["evictions"]
@@ -348,21 +389,33 @@ class RankService:
         plan = backend.plan(batch, skey)
         with self._lock:
             self._plans.put(key, plan)
+            self._topo_index[tkey] = key
+            if len(self._topo_index) > 4 * max(self.cfg.plan_cache_size, 1):
+                self._topo_index.clear()  # advisory index; rebuilt by use
             self.stats["plan_misses"] += 1
+            if had_predecessor:
+                self._m_delta_replanned.inc()
             self.stats["plan_evictions"] = self._plans.stats["evictions"]
-        if self._plan_spill is not None:
-            # durability write-through is strictly optional: a full disk
-            # or unserializable backend must not fail a batch whose plan
-            # is already built and cached
-            try:
-                arrays, meta = backend.plan_arrays(plan)
-                with self._spill_io_lock:  # concurrent same-key builds
-                    self._plan_spill.put(key, arrays, meta)
-                with self._lock:
-                    self.stats["plan_spilled"] += 1
-            except (NotImplementedError, OSError, ValueError, TypeError):
-                pass  # TypeError: json-unserializable meta from a backend
+        self._spill_plan(backend, key, plan)
         return plan
+
+    def _spill_plan(self, backend: SweepBackend, key: tuple,
+                    plan: SweepPlan):
+        """Write-through a built/patched plan to the plan spill.
+
+        Durability is strictly optional: a full disk or unserializable
+        backend must not fail a batch whose plan is already built and
+        cached (TypeError: json-unserializable meta from a backend)."""
+        if self._plan_spill is None:
+            return
+        try:
+            arrays, meta = backend.plan_arrays(plan)
+            with self._spill_io_lock:  # concurrent same-key builds
+                self._plan_spill.put(key, arrays, meta)
+            with self._lock:
+                self.stats["plan_spilled"] += 1
+        except (NotImplementedError, OSError, ValueError, TypeError):
+            pass
 
     def _restore_plan(self, backend: SweepBackend, key: tuple,
                       skey: str) -> Optional[SweepPlan]:
@@ -525,14 +578,121 @@ class RankService:
         return n
 
     def clear_result_cache(self):
-        """Drop all converged-vector state (LRU entries + the warm-start
-        table) while KEEPING cached plans — the bench's warm-plan /
-        cold-vector leg, and a memory valve for long-lived services.
-        Spilled entries on disk are untouched."""
+        """Drop all converged-vector state (LRU entries, pending spill
+        writes, the warm-start table) while KEEPING cached plans — the
+        bench's warm-plan / cold-vector leg, and a memory valve for
+        long-lived services.
+
+        With a spill configured, clearing also bumps the spill's data
+        generation: everything on disk was written under the old one and
+        now reads as absent, so cleared state stays cleared across both
+        the serve path's disk fallback and a restart's restore (it used
+        to resurrect from either)."""
         with self._lock:
             self._cache.clear()
+            self._spill_pending.clear()  # pre-clear vectors; must not land
             self._warm_h[:] = 0.0
             self._warm_seen[:] = False
+        if self._spill is not None:
+            with self._spill_io_lock:
+                self._spill.bump_data_generation()
+
+    def apply_edge_delta(self, adds=None, removes=None,
+                         reweights=None) -> dict:
+        """Roll an edge changeset into the running service (live graph
+        mutation — no restart, no cold caches; see ``serve.delta``).
+
+        ``adds``: (src, dst) or (src, dst, w) rows; ``removes``: (src,
+        dst) rows; ``reweights``: (src, dst, w) rows. Weights must be
+        finite and nonzero (reweight-to-0 is a remove). Node ids are
+        fixed at construction — deltas change edges only.
+
+        What survives, by design:
+
+        * **warm table** — entirely (the tentpole carry-over): post-delta
+          refreshes warm-start from the pre-delta fixed points, which the
+          paper's acceleration premise makes converge in a handful of
+          sweeps instead of from uniform.
+        * **plans** — weight-only deltas keep every topology, so the next
+          lookup value-patches the cached layout (``SweepBackend.patch``
+          via the weight-blind topology index; ``service.delta.patched``)
+          instead of rebuilding. Structural deltas rebuild only plans
+          whose union subgraphs actually changed — untouched unions
+          produce byte-identical padded arrays and keep hitting.
+        * **cached results outside the delta** — only entries whose node
+          set intersects a changed edge's endpoints are invalidated
+          (``service.delta.invalidated``); the rest keep serving as hits.
+
+        What cannot survive: pre-delta vectors for touched subgraphs —
+        in memory (invalidated here), in flight to disk (pending writes
+        dropped), and on disk (the spill's data generation bumps, so the
+        disk fallback and restart-restore read them as absent; surviving
+        entries re-spill under the new generation when ``spill_policy``
+        is "all").
+
+        Thread-safe, but the intended call pattern is inside a queue
+        drain window (drain -> apply_edge_delta -> undrain, see
+        ``launch.serve_rank.roll_delta``) so no batch is mid-flight
+        against the pre-delta graph. Returns a summary dict; timing goes
+        to ``service.delta.swap_ms``.
+        """
+        import time
+        t0 = time.perf_counter()
+        delta = EdgeDelta.normalize(adds, removes, reweights,
+                                    self.g.n_nodes)
+        if delta.empty:
+            return {"structural": False, "invalidated": 0,
+                    "touched_nodes": 0, "data_generation": None,
+                    "swap_ms": 0.0}
+        new_g, table = apply_to_graph(self.g, self._edge_table, delta)
+        touched = delta.touched_nodes()
+        with self._lock:
+            if delta.structural:
+                self.g = new_g
+                self.extractor = SubgraphExtractor(new_g, self.cfg.out_cap,
+                                                   self.cfg.in_cap)
+            self._edge_table = table
+            doomed = {k for k, e in self._cache.items()
+                      if np.isin(e.nodes, touched,
+                                 assume_unique=True).any()}
+            for k in doomed:
+                del self._cache[k]
+            self._m_delta_invalidated.inc(len(doomed))
+            # in-flight writes of now-stale vectors must not reach disk
+            self._spill_pending = [p for p in self._spill_pending
+                                   if p[0] not in doomed]
+            survivors = [(k, e.nodes, e.authority, e.hub)
+                         for k, e in self._cache.items()]
+        gen = None
+        if self._spill is not None:
+            with self._spill_io_lock:
+                gen = self._spill.bump_data_generation()
+            if self.cfg.spill_policy == "all" and survivors:
+                # everything on disk just went stale; re-spill the still-
+                # valid entries under the new generation so a restart
+                # keeps them (only pre-delta state for touched subgraphs
+                # must die)
+                with self._lock:
+                    self._spill_pending.extend(survivors)
+                self._drain_spill()
+        swap_ms = (time.perf_counter() - t0) * 1e3
+        self._m_delta_swap.observe(swap_ms)
+        return {"structural": delta.structural,
+                "invalidated": len(doomed),
+                "touched_nodes": int(len(touched)),
+                "data_generation": gen, "swap_ms": swap_ms}
+
+    def _union_weights(self, nodes: np.ndarray, src_loc: np.ndarray,
+                       dst_loc: np.ndarray) -> Optional[np.ndarray]:
+        """Per-edge weights for a union subgraph's induced edges (local
+        endpoint arrays + the local->global node map), or None when no
+        delta has ever reweighted anything (all 1.0 — the assemble stage
+        keeps its legacy constant fill and bit-identical hashes)."""
+        table = self._edge_table
+        if table is None:
+            return None
+        return lookup_weights(table, self.g.n_nodes,
+                              nodes[src_loc], nodes[dst_loc])
 
     def snapshot_stats(self) -> dict:
         """A consistent copy of the stats counters (the legacy key set).

@@ -14,6 +14,15 @@ Layout: ``<spill_dir>/<root-set-hash>/step_<gen>/{arrays.npz,manifest.json}``
 generation and prune the old one, and a crash mid-write never corrupts the
 previously-spilled generation (the checkpoint module's invariant).
 
+Orthogonal to those per-entry *step* generations, the spill carries one
+**data generation** for the whole directory (the ``DATA_GEN`` file):
+every record is tagged with the generation it was written under, and
+readers treat records from any other generation as absent. Explicit
+invalidation — ``RankService.clear_result_cache`` and
+``RankService.apply_edge_delta`` — bumps it, so cleared/pre-delta vectors
+stay dead across both the serve path's disk fallback and restart-restore
+instead of resurrecting from disk.
+
 ``PlanSpill`` gives ``SweepPlan`` layouts the same treatment under
 ``<spill_dir>/plans/`` — a restarted service skips layout rebuilds the
 way the vector spill lets it skip re-convergence.
@@ -88,6 +97,30 @@ class CacheSpill:
         self.dir = spill_dir
         self.keep_generations = max(int(keep_generations), 1)
         os.makedirs(spill_dir, exist_ok=True)
+        self._gen_path = os.path.join(spill_dir, "DATA_GEN")
+        self.data_generation = self._read_data_generation()
+
+    def _read_data_generation(self) -> int:
+        try:
+            with open(self._gen_path) as f:
+                return int(f.read().strip() or 0)
+        except (OSError, ValueError):
+            return 0  # fresh dir, or a legacy dir from before DATA_GEN
+
+    def bump_data_generation(self) -> int:
+        """Invalidate every record currently on disk.
+
+        Bumps the directory-wide data generation (persisted atomically in
+        the ``DATA_GEN`` file, so the invalidation survives restarts); all
+        existing records were tagged with the old generation and now read
+        as absent. New ``put``s write under the new generation. Returns
+        the new generation."""
+        self.data_generation = self._read_data_generation() + 1
+        tmp = self._gen_path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{self.data_generation}\n")
+        os.replace(tmp, self._gen_path)
+        return self.data_generation
 
     def put(self, key: str, nodes: np.ndarray, authority: np.ndarray,
             hub: np.ndarray) -> str:
@@ -96,7 +129,8 @@ class CacheSpill:
         tree = {"nodes": np.asarray(nodes), "authority": np.asarray(authority),
                 "hub": np.asarray(hub)}
         path = checkpoint.save(entry_dir, gen, tree,
-                               extra={"key": key, "n_nodes": len(nodes)})
+                               extra={"key": key, "n_nodes": len(nodes),
+                                      "data_gen": self.data_generation})
         checkpoint.prune(entry_dir, keep=self.keep_generations)
         return path
 
@@ -120,11 +154,20 @@ class CacheSpill:
         return removed
 
     def get(self, key: str) -> Optional[Dict[str, np.ndarray]]:
-        """{"nodes", "authority", "hub"} or None if absent/unreadable."""
+        """{"nodes", "authority", "hub"} or None if absent/unreadable.
+
+        Records written under a different data generation read as absent:
+        explicitly-invalidated state (``clear_result_cache``, edge deltas)
+        must stay dead even though its bytes are still on disk."""
         entry_dir = os.path.join(self.dir, key)
         try:
-            arrays, _step, _extra = checkpoint.restore_arrays(entry_dir)
+            arrays, _step, extra = checkpoint.restore_arrays(entry_dir)
         except _READ_ERRORS:
+            return None
+        try:
+            if int(extra.get("data_gen", 0)) != self.data_generation:
+                return None
+        except (TypeError, ValueError):
             return None
         try:
             return {f: arrays[f"k={f}"] for f in _FIELDS}

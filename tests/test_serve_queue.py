@@ -430,3 +430,53 @@ def test_queued_matches_sync_every_backend():
     assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
     for b in ("dense", "sharded", "bsr"):
         assert f"QUEUE PARITY {b} OK" in r.stdout
+
+
+# -------------------------------------------- deadlines & zero-downtime
+
+
+def test_submit_deadline_ms_zero_is_an_immediate_deadline(g, queries):
+    """Regression: ``deadline_ms=0`` is an already-expired SLA, not "no
+    SLA" — a falsy-zero check would silently promote it to ``math.inf``
+    and the request would sit out the full queue deadline unmissed."""
+    import math
+
+    svc = svc_for(g)
+    roots = queries[0]
+    svc.rank([roots])  # pre-converged: dispatch is a pure cache hit
+    with svc.queue(deadline_ms=10_000) as q:
+        t0 = time.perf_counter()
+        t = q.submit(roots, deadline_ms=0)
+        assert math.isfinite(t.deadline_at)
+        assert t.deadline_at <= t0 + 0.5  # "now", not now + queue deadline
+        r = t.result(timeout=120)
+        elapsed = time.perf_counter() - t0
+    assert r.status == "hit"
+    assert elapsed < 5  # woke the flush timer, not the 10s queue deadline
+    assert q.stats["flush_deadline"] == 1
+    assert q.stats["deadline_miss"] == 1  # expired-on-arrival IS a miss
+    # and the non-SLA spelling still means "no deadline"
+    with svc.queue(deadline_ms=10) as q2:
+        assert q2.submit(roots).deadline_at == math.inf
+
+
+def test_undrain_reopens_admission_without_sheds(g, queries):
+    """drain() -> undrain() is the zero-downtime roll: guaranteed traffic
+    submitted on either side of the gap is served, nothing guaranteed is
+    shed, and admission after undrain() behaves like a fresh queue."""
+    svc = svc_for(g)
+    with svc.queue(deadline_ms=10) as q:
+        before = [q.submit(qq) for qq in queries[:2]]
+        d = q.drain(flush_spill=False)
+        assert d["served"] >= 0  # pending guaranteed served, not dropped
+        with pytest.raises(RuntimeError, match="draining|closed"):
+            q.submit(queries[2])  # admission really is stopped
+        assert q.undrain() is True
+        assert q.undrain() is False  # already open: no-op
+        after = [q.submit(qq) for qq in queries[2:4]]
+        results = [t.result(timeout=120) for t in before + after]
+    assert all(r.status in ("cold", "warm", "hit") for r in results)
+    assert q.telemetry_snapshot()["queue.undrains"] == 1
+    cls = q.snapshot_stats()["classes"][0]
+    assert cls["shed"] == 0
+    assert cls["served"] == 4

@@ -386,3 +386,38 @@ def test_launcher_sigterm_drains_and_exits_zero(tmp_path):
     submits, shed, served = int(m.group(1)), int(m.group(2)), int(m.group(3))
     assert 0 < submits < 5000  # the signal really landed mid-stream
     assert shed + served <= submits + 1  # coalescing can only merge
+
+
+# ------------------------------------ zero-observation histogram contract
+
+
+def test_zero_observation_histogram_snapshot_is_null_not_zero():
+    """A histogram nobody has observed must report p50/p95/p99 as None —
+    a 0.0 would read as "all requests are instant" on a dashboard. Pinned
+    because delta/drain histograms commonly sit at zero observations for
+    a service's whole lifetime."""
+    reg = MetricsRegistry()
+    h = reg.histogram("quiet_ms")
+    s = h.summary()
+    assert s["count"] == 0 and s["sum"] == 0.0
+    assert s["p50"] is None and s["p95"] is None and s["p99"] is None
+    assert s["min"] is None and s["max"] is None
+    snap = reg.snapshot()
+    assert snap["quiet_ms"]["p50"] is None
+    blob = render_json(snap)
+    assert json.loads(blob)["quiet_ms"]["p50"] is None
+    assert b'"p50": null' in blob  # JSON null, never 0
+
+
+def test_zero_observation_histogram_over_stats_endpoint():
+    """The same contract end to end: a scraper hitting /stats.json sees
+    JSON nulls for an unobserved histogram's percentiles."""
+    reg = MetricsRegistry()
+    reg.histogram("service.delta.swap_ms")
+    with StatsServer(lambda: reg.snapshot(), lambda: (True, "ok"),
+                     port=0) as srv:
+        code, body = _get(f"http://127.0.0.1:{srv.port}/stats.json")
+    assert code == 200
+    got = json.loads(body)["service.delta.swap_ms"]
+    assert got["count"] == 0
+    assert got["p50"] is None and got["p95"] is None and got["p99"] is None
