@@ -31,7 +31,11 @@ match the single-phase f64 service <= 1e-10 L1 with every residual
 certificate <= the polish tol (armed in --smoke), while the per-sweep cost
 at the bulk dtype beats f64 >= 2x (full runs only) — plus a served-only
 percentile check on the overload axis (shedding must never *lower* a
-class's reported p95).
+class's reported p95). ISSUE 10 adds the lumping axis: duplicate-heavy
+and dangling-heavy graphs served ``lumping=off`` vs ``on`` — the
+plan-time reduction must not change the math (<= 1e-10 L1, armed in
+--smoke) while actually shrinking the swept matrix (lumped rows >= 1,
+armed in --smoke) and improving per-sweep time (full runs only).
 
 ``--smoke`` shrinks everything to a seconds-scale CI tripwire (tiny graph,
 few queries, perf gates skipped — correctness gates still enforced).
@@ -54,7 +58,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from repro.core import accel_hits  # noqa: E402
-from repro.graph import WebGraphSpec, generate_webgraph  # noqa: E402
+from repro.graph import Graph, WebGraphSpec, generate_webgraph  # noqa: E402
 from repro.serve import RankService, RankServiceConfig  # noqa: E402
 
 
@@ -421,7 +425,7 @@ def delta_swap_axis(g, cfg, queries, deadline_ms):
         post = [t.result(timeout=600)
                 for t in [rq.submit(q) for q in queries]]
         stats = rq.snapshot_stats()
-    patched = svc.telemetry_snapshot()["service.delta.patched"]
+    patched = sum(svc.telemetry_snapshot()["service.delta.patched"].values())
     built = svc.stats["plan_misses"] - misses_before
 
     oracle = RankService(g, cfg())
@@ -433,6 +437,82 @@ def delta_swap_axis(g, cfg, queries, deadline_ms):
             "invalidated": summ["invalidated"], "swap_ms": summ["swap_ms"],
             "roll_ms": roll_ms, "shed0": shed0,
             "served0": stats["classes"].get(0, {}).get("served", 0)}
+
+
+def _clone_heavy_graph(n_hubs, clones, seed=0):
+    """Hubs over a random backbone, each fanning out to ``clones`` sink
+    nodes with identical in-adjacency: one duplicate class per hub."""
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for i in range(n_hubs):
+        for j in range(n_hubs):
+            if i != j and rng.random() < 0.5:
+                src.append(i)
+                dst.append(j)
+    n = n_hubs
+    for h in range(n_hubs):
+        src.extend([h] * clones)
+        dst.extend(range(n, n + clones))
+        n += clones
+    g = Graph(n, np.asarray(src, np.int32), np.asarray(dst, np.int32))
+    return g, list(range(n_hubs))
+
+
+def _dangling_heavy_graph(core, isolated, seed=1):
+    """A connected core plus fully isolated satellites: queries rooted on
+    satellites pull zero-degree rows into their unions."""
+    g0 = generate_webgraph(WebGraphSpec(core, core * 6, 0.3, seed=seed))
+    g = Graph(core + isolated, g0.src, g0.dst)
+    return g, list(range(core, core + isolated))
+
+
+def lumping_axis(v, tol, smoke):
+    """Plan-time lumped sweep reduction (ISSUE 10; parity armed in --smoke).
+
+    Two reducible graph families, each served lumping="off" vs "on" on
+    the same stream: duplicate-heavy (hub fans to clone sinks — whole
+    classes collapse to one multiplicity-weighted representative) and
+    dangling-heavy (isolated roots drag zero-degree rows into the union
+    — they drop entirely). Gates: <= 1e-10 L1 parity and a real row
+    reduction (lumped rows >= 1, i.e. reduced rows < full rows) armed in
+    --smoke; per-sweep time improvement on the duplicate-heavy leg in
+    full runs (the reduction must cross pow2 shape buckets to pay).
+    """
+    hubs, clones = (4, 24) if smoke else (12, 96)
+    fams = {
+        "duplicate_heavy": _clone_heavy_graph(hubs, clones),
+        "dangling_heavy": _dangling_heavy_graph(
+            40 if smoke else 200, 80 if smoke else 400),
+    }
+    out = {}
+    for fam, (g2, roots) in fams.items():
+        rng = np.random.default_rng(3)
+        qs = [rng.choice(roots, size=min(3, len(roots)), replace=False)
+              for _ in range(4 if smoke else 12)]
+
+        def c(lumping):
+            return RankServiceConfig(v_max=v, tol=tol, lumping=lumping,
+                                     out_cap=2 * clones, in_cap=64)
+
+        def run(lumping):
+            RankService(g2, c(lumping)).rank(qs)  # compile warmup
+            svc = RankService(g2, c(lumping))
+            res = svc.rank(qs)
+            sweep_s = sum(t1 - t0 for _r, _j, st, t0, t1
+                          in svc.pipeline.trace if st == "sweep")
+            us = sweep_s / max(svc.stats["sweeps"], 1) * 1e6
+            return res, us, svc.telemetry_snapshot()
+
+        off, us_off, _ = run("off")
+        on, us_on, snap = run("on")
+        l1 = max(max(float(np.abs(a.authority - b.authority).sum()),
+                     float(np.abs(a.hub - b.hub).sum()))
+                 for a, b in zip(off, on))
+        ratio = snap["service.plan.reduction_ratio"]
+        out[fam] = {"l1": l1, "us_off": us_off, "us_on": us_on,
+                    "lumped": snap["service.plan.lumped_nodes"],
+                    "ratio_max": ratio["max"] or 0.0}
+    return out
 
 
 def precision_axis(g, cfg, queries, smoke):
@@ -660,6 +740,15 @@ def main():
           f"invalidated={ds['invalidated']} swap_ms={ds['swap_ms']:.1f} "
           f"roll_ms={ds['roll_ms']:.1f} class0_shed={ds['shed0']}")
 
+    # --- lumping axis: plan-time reduced sweeps on duplicate-heavy and
+    # dangling-heavy graphs (ISSUE 10; parity + reduction armed in --smoke)
+    lump = lumping_axis(args.v, args.tol, args.smoke)
+    for fam, row in lump.items():
+        print(f"serve/lumping_{fam},{row['us_on']:.1f},"
+              f"off_us_per_sweep={row['us_off']:.1f} "
+              f"lumped_rows={row['lumped']} "
+              f"max_reduction={row['ratio_max']:.0%} l1={row['l1']:.2e}")
+
     # --- precision axis: bf16/fp32 bulk sweeps + certified f64 refinement
     # (ISSUE 7; parity armed in --smoke, per-sweep speedup full runs only)
     prec_l1, cert_max, cert_tol, per_sweep, prec_speed = \
@@ -805,6 +894,21 @@ def main():
     print(f"ACCEPTANCE delta_swap: {'PASS' if ok_delta else 'FAIL'} "
           f"(l1 {ds['l1']:.2e}, {ds['patched']} patched / {ds['built']} "
           f"rebuilt, class-0 shed {ds['shed0']})")
+    # ISSUE 10: the lump-reduced sweep must not change the math and must
+    # actually shrink the swept matrix on both reducible families (armed
+    # in --smoke); the smaller matrix must buy per-sweep time on the
+    # duplicate-heavy leg (full runs — smoke shapes are too small to
+    # cross pow2 buckets meaningfully)
+    ok_lump = all(row["l1"] <= 1e-10 and row["lumped"] >= 1
+                  for row in lump.values())
+    print(f"ACCEPTANCE lumping_parity: {'PASS' if ok_lump else 'FAIL'} "
+          f"(max l1 {max(r['l1'] for r in lump.values()):.2e}, lumped "
+          + "/".join(str(r['lumped']) for r in lump.values()) + " rows)")
+    dh = lump["duplicate_heavy"]
+    ok_lump_speed = args.smoke or dh["us_on"] < dh["us_off"]
+    print(f"ACCEPTANCE lumping_per_sweep: "
+          f"{('PASS' if ok_lump_speed else 'FAIL') if not args.smoke else 'SKIP (smoke)'} "
+          f"(on {dh['us_on']:.1f}us vs off {dh['us_off']:.1f}us)")
     # ISSUE 7: the precision ladder must not change the math — <= 1e-10
     # to the f64 service with every certificate <= the polish tol (armed
     # in --smoke); the bulk dtype must buy >= 2x per-sweep throughput
@@ -831,6 +935,7 @@ def main():
                  and ok_pipe_parity and ok_pipe_speed and ok_early
                  and ok_protect and ok_prompt and ok_collapse
                  and ok_window and ok_endpoint and ok_delta
+                 and ok_lump and ok_lump_speed
                  and ok_prec_parity and ok_prec_speed) else 1
 
 

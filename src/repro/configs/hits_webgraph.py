@@ -28,6 +28,11 @@ class RankingConfig:
     # f64 polish to tol with a residual certificate; "" = single-phase
     serve_sweep_dtype: str = ""     # "" | bf16 | fp32 | f64
     serve_polish_tol: float = 0.0   # 0: polish to the configured tol
+    # plan-time lumped sweep reduction (serve.plans.lump_batch): drop
+    # isolated union rows + collapse duplicate-pattern classes before any
+    # kernel runs; "auto" applies only above the reduction-ratio gate,
+    # "off" is bit-identical to the unreduced path
+    serve_lumping: str = "off"      # off | on | auto
     # rank-stability early exit (Peserico & Pretto): a column stops once
     # its top-rank_k authority ordering has been unchanged stable_sweeps
     # sweeps running; 0 = exact-residual stopping only

@@ -140,6 +140,12 @@ def main():
                     default=CONFIG.serve_polish_tol,
                     help="precision ladder polish tolerance (0: the "
                          "configured --tol)")
+    ap.add_argument("--lumping", default=CONFIG.serve_lumping,
+                    choices=["off", "on", "auto"],
+                    help="plan-time lumped sweep reduction: drop isolated "
+                         "union rows + collapse duplicate-pattern classes "
+                         "before planning/sweeping (auto: only above the "
+                         "reduction-ratio gate)")
     ap.add_argument("--rank-k", type=int, default=CONFIG.serve_rank_k,
                     help="rank-stability early exit: stop a column once its "
                          "top-k authority ordering holds stable (0: exact "
@@ -211,6 +217,7 @@ def main():
                                  pipeline_depth=args.pipeline_depth,
                                  sweep_dtype=args.sweep_dtype,
                                  polish_tol=args.polish_tol or None,
+                                 lumping=args.lumping,
                                  rank_k=args.rank_k,
                                  stable_sweeps=args.stable_sweeps,
                                  deadline_ms=args.deadline_ms,

@@ -139,6 +139,11 @@ class SweepBatch:
     ``bulk_stop_tol(bulk_dtype, tol)``, then the full-precision polish
     loop iterates to ``tol``. None is the single-phase legacy loop
     (bit-identical trace).
+
+    ``lump_key`` marks a batch whose arrays are the lump-reduced form of a
+    full assembled batch (``serve.plans.lump_batch``): the reduction map's
+    content hash. It joins the service plan-cache key so lumped and
+    unlumped plans never alias; '' is an ordinary full-space batch.
     """
 
     h0: np.ndarray
@@ -154,6 +159,7 @@ class SweepBatch:
     rank_k: int = 0
     stable_sweeps: int = 2
     bulk_dtype: object = None
+    lump_key: str = ""
 
     def structure_key(self) -> str:
         """Hash of the structure-only fields a plan may depend on."""
@@ -524,6 +530,38 @@ class ShardedSweepBackend(SweepBackend):
                            n_pad=int(meta["n_pad"]), mesh=self.mesh,
                            mode=self.mode, n_shards=self.n_shards,
                            per=int(meta["per"]), nb=int(meta["nb"]),
+                           eargs=eargs)
+
+    def patch(self, plan: ShardedPlan, b: SweepBatch,
+              key: str = "") -> Optional[ShardedPlan]:
+        """Weight-only update keeping the device shard layout.
+
+        The pow2 bucketing (blocked order, per-shard counts, ``per``,
+        ``nb``) is a deterministic function of the kept edge endpoints
+        alone, and a weight-only delta preserves the w != 0 keep mask
+        (reweight-to-0 is classified structural), so a same-topology
+        successor batch repacks into byte-identical endpoint planes — only
+        the weight planes change. Repack the weights host-side (the
+        ``bsr_revalue`` analogue for shard buckets) and ship just those;
+        the device endpoint arrays, the shared mesh, and every compiled
+        sweep keyed on (mode, per, nb) are reused from the old plan.
+        Returns None when the repacked buckets would not fit the old
+        layout (per/nb drift — not a weight-only successor)."""
+        self._check(plan, b)
+        shards = build_edge_shards_cols(b.src, b.dst, b.w, plan.n_pad,
+                                        self.n_shards, self.mode)
+        if shards["mode"] != plan.mode or int(shards["per"]) != plan.per \
+                or int(shards.get("nb", 0)) != plan.nb:
+            return None
+        e = plan.eargs
+        if plan.mode == "replicated":
+            eargs = (e[0], e[1], jnp.asarray(shards["w"], b.dtype))
+        else:
+            eargs = (e[0], e[1], jnp.asarray(shards["a"]["w"], b.dtype),
+                     e[3], e[4], jnp.asarray(shards["h"]["w"], b.dtype))
+        return ShardedPlan(key=key or b.structure_key(), backend=self.name,
+                           n_pad=plan.n_pad, mesh=plan.mesh, mode=plan.mode,
+                           n_shards=plan.n_shards, per=plan.per, nb=plan.nb,
                            eargs=eargs)
 
     def _vector_layout(self, plan: ShardedPlan, h0, ca, ch, m, dtype):

@@ -99,6 +99,7 @@ class _Assembled:
     locs: list                     # per-todo union-local index arrays
     backend: Any = None
     batch: Optional[SweepBatch] = None
+    lump: Any = None               # LumpMap when the batch is lump-reduced
     plan: Any = None
     h: Any = None
     a: Any = None
@@ -272,6 +273,16 @@ class ServePipeline:
             dtype=svc._dtype, rank_k=rank_k,
             stable_sweeps=svc.cfg.stable_sweeps,
             bulk_dtype=svc._bulk_dtype)
+        if svc._lumping is not None:
+            # plan-time lumped reduction (serve.plans): every backend
+            # plans and sweeps the reduced arrays; the sweep stage unlumps
+            # back to the full node space before publish reads anything
+            from .plans import LUMP_AUTO_MIN_RATIO, lump_batch
+            min_ratio = (LUMP_AUTO_MIN_RATIO
+                         if svc._lumping == "auto" else 0.0)
+            red, lmap = lump_batch(asm.batch, min_ratio=min_ratio)
+            if red is not None:
+                asm.batch, asm.lump = red, lmap
         return asm
 
     def plan(self, asm: _Assembled) -> _Assembled:
@@ -289,6 +300,12 @@ class ServePipeline:
         with self._sweep_lock:
             asm.h, asm.a, asm.conv, asm.res = \
                 asm.backend.sweep(asm.plan, asm.batch)
+        if asm.lump is not None:
+            # exact unlump: scatter representative scores to class members
+            # and renormalize, so publish (and through it the cache, warm
+            # table, and spill) only ever sees full-space vectors
+            from .plans import unlump_cols
+            asm.h, asm.a = unlump_cols(asm.h, asm.a, asm.lump)
         with self._meta_lock:
             self.stats["swept"] += 1
         return asm
@@ -331,6 +348,11 @@ class ServePipeline:
                 svc.telemetry.counter("service.exit", reasons[j]).inc()
             if asm.batch.bulk_dtype is not None:
                 svc._m_ladder.inc()
+            if asm.lump is not None:
+                # lumping telemetry counts with the served work (an
+                # assembled-but-abandoned job must not leave phantom stats)
+                svc._m_lumped_nodes.inc(asm.lump.lumped_nodes)
+                svc._m_reduction_ratio.observe(asm.lump.ratio)
             for j, (slot, fs, _entry) in enumerate(asm.todo):
                 loc = asm.locs[j]
                 auth_j, hub_j = asm.a[loc, j], asm.h[loc, j]

@@ -98,6 +98,14 @@ class RankServiceConfig:
     # layouts (edge shards, BSR blockings, device edge lists) so repeat
     # root sets skip host-side rebuilds; <= 0 disables
     plan_cache_size: int = 64
+    # plan-time lumped sweep reduction (serve.plans.lump_batch — Dong,
+    # Feng & You): "on" shrinks every assembled batch before planning and
+    # sweeping (isolated rows dropped, duplicate-pattern classes collapsed
+    # to multiplicity-weighted representatives) and exactly unlumps the
+    # published vectors; "auto" applies it only when the reduction removes
+    # at least plans.LUMP_AUTO_MIN_RATIO of the union's live rows; "off"
+    # (default) is bit-identical to the pre-lumping path
+    lumping: str = "off"
     # staged dispatch pipeline (serve.pipeline.ServePipeline): number of
     # batches in flight. 1 = serial (assemble(j) sees publish(j-1));
     # >= 2 overlaps batch j's host assemble/plan with batch j-1's device
@@ -208,6 +216,12 @@ class RankService:
                 f"stable_sweeps must be >= 1, got {self.cfg.stable_sweeps}")
         if self.cfg.spill_policy not in ("all", "evict"):
             raise ValueError(f"unknown spill policy {self.cfg.spill_policy!r}")
+        if self.cfg.lumping not in ("off", "on", "auto"):
+            raise ValueError(f"unknown lumping mode {self.cfg.lumping!r} "
+                             f"(want off | on | auto)")
+        # "off" normalizes to None (mirroring the ladder) so the disabled
+        # path touches no lumping code and stays bit-identical
+        self._lumping = None if self.cfg.lumping == "off" else self.cfg.lumping
         self.extractor = SubgraphExtractor(g, self.cfg.out_cap,
                                            self.cfg.in_cap)
         self._backends: Dict[str, SweepBackend] = {}
@@ -255,10 +269,19 @@ class RankService:
         self._m_spill_write = reg.histogram("service.spill.write_ms")
         reg.gauge("service.cache.entries")
         reg.gauge("service.plan_cache.entries")
+        # plan-time lumping (serve.plans.lump_batch): live rows removed per
+        # swept batch and the per-batch reduction ratio (observed only for
+        # batches the reduction actually applied to)
+        self._m_lumped_nodes = reg.counter("service.plan.lumped_nodes")
+        self._m_reduction_ratio = reg.histogram(
+            "service.plan.reduction_ratio")
         # live edge-delta rolls (apply_edge_delta / the lazy plan patching
-        # it arms): plans value-patched vs fully replanned, result-cache
-        # entries invalidated, and the swap's wall time
-        self._m_delta_patched = reg.counter("service.delta.patched")
+        # it arms): plans value-patched (labeled by the backend that
+        # patched) vs fully replanned, result-cache entries invalidated,
+        # and the swap's wall time
+        from .backends import BACKENDS
+        for b in BACKENDS:
+            reg.counter("service.delta.patched", b)
         self._m_delta_replanned = reg.counter("service.delta.replanned")
         self._m_delta_invalidated = reg.counter("service.delta.invalidated")
         self._m_delta_swap = reg.histogram("service.delta.swap_ms")
@@ -345,6 +368,12 @@ class RankService:
         # operator copies (bsr) a ladder-free plan lacks
         stop = (int(batch.rank_k), int(batch.stable_sweeps),
                 batch.ladder_key())
+        if batch.lump_key:
+            # lumped plans must never alias unlumped ones, in memory or on
+            # disk: the reduction map's content hash joins the key (and
+            # through it the PlanSpill record). Unlumped batches keep the
+            # legacy tuple bit-identical.
+            stop = stop + ("lump:" + batch.lump_key,)
         key = (backend.name, backend.plan_params(), skey, stop)
         with self._lock:
             plan = self._plans.get(key)
@@ -371,7 +400,8 @@ class RankService:
                 with self._lock:
                     self._plans.put(key, plan)
                     self._topo_index[tkey] = key
-                    self._m_delta_patched.inc()
+                    self.telemetry.counter("service.delta.patched",
+                                           backend.name).inc()
                     self.stats["plan_evictions"] = \
                         self._plans.stats["evictions"]
                 self._spill_plan(backend, key, plan)

@@ -239,10 +239,13 @@ class PlanSpill:
     Format history: 2 — the precision ladder joined the service cache key
     (its third tuple element grew a ladder marker) and the bsr backend's
     meta gained "bulk"; pre-ladder records must not rehydrate under keys
-    they were never built for.
+    they were never built for. 3 — plan-time lumping joined the cache key
+    (a ``lump:<map-hash>`` marker on the stop tuple) and plans may now be
+    built from lump-reduced arrays; pre-lumping records must not alias
+    reduced layouts they were never built for.
     """
 
-    FORMAT = 2
+    FORMAT = 3
 
     def __init__(self, spill_dir: str, keep_generations: int = 1):
         self.dir = os.path.join(spill_dir, "plans")

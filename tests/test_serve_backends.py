@@ -112,6 +112,32 @@ for r, o in zip(svc64.rank(queries), ref_cold):
 print("LADDER_PARITY", MODE, "OK")
 """
 
+PARITY_LUMPED = _PARITY_PRELUDE + r"""
+assert len(jax.devices()) == 8, jax.devices()
+# plan-time lumping axis (ISSUE 10): lumping="on" must land on the same
+# fixed point as the unlumped f64 oracle on every backend and device
+# count — the reduced sweep + exact unlump is invisible to clients.
+def check_lumped(label, **kw):
+    svc = RankService(g, RankServiceConfig(v_max=4, tol=TOL, lumping="on",
+                                           **kw))
+    for r, o in zip(svc.rank(queries), ref_cold):
+        assert (r.nodes == o.nodes).all(), label
+        assert np.abs(r.authority - o.authority).sum() <= 1e-10, label
+        assert np.abs(r.hub - o.hub).sum() <= 1e-10, label
+    hits = svc.rank(queries)   # lumped plans serve bit-identical repeats
+    for r2 in hits:
+        assert r2.status == "hit" and r2.iters == 0, (label, r2.status)
+    return svc
+
+for mode in ("replicated", "dual_blocked"):
+    for s in (1, 2, 4, 8):
+        check_lumped(f"lumped/sharded/{mode}/{s}", backend="sharded",
+                     shard_mode=mode, shard_devices=s)
+check_lumped("lumped/dense", backend="dense")
+check_lumped("lumped/bsr", backend="bsr")
+print("LUMPED_PARITY OK")
+"""
+
 LADDER = r"""
 import numpy as np, jax
 jax.config.update("jax_enable_x64", True)
@@ -144,6 +170,7 @@ print("LADDER OK")
      "MODE='replicated'\n" + PARITY_LADDER),
     ("precision_ladder_dual_blocked",
      "MODE='dual_blocked'\n" + PARITY_LADDER),
+    ("lumped_parity", PARITY_LUMPED),
 ])
 def test_backend_parity(name, code):
     out = _run(code)

@@ -61,7 +61,7 @@ def test_weight_delta_patches_plan_and_matches_cold_oracle(g, backend):
     assert r.status != "hit"  # pre-delta result must not be served
 
     snap = svc.telemetry_snapshot()
-    assert snap["service.delta.patched"] >= 1
+    assert snap["service.delta.patched"][backend] >= 1
     assert svc.stats["plan_misses"] == misses_before
     assert snap["service.delta.swap_ms"]["count"] == 1
 
@@ -70,10 +70,10 @@ def test_weight_delta_patches_plan_and_matches_cold_oracle(g, backend):
     assert_close(r, oracle.rank([roots])[0])
 
 
-def test_sharded_weight_delta_replans_and_matches_oracle(g):
-    """The sharded backend has no patch hook: a surviving topology is
-    detected (replanned counter) but the plan rebuilds — results still
-    match the cold oracle."""
+def test_sharded_weight_delta_patches_and_matches_oracle(g):
+    """The sharded patch hook revalues the pow2-bucketed device shards
+    in place: a reweight-only delta fires the patched counter (never
+    replanned) and the served fixed point matches the cold oracle."""
     svc = make(g, backend="sharded", shard_devices=1)
     roots = np.array([4, 5, 6])
     svc.rank([roots])
@@ -82,8 +82,8 @@ def test_sharded_weight_delta_replans_and_matches_oracle(g):
     svc.apply_edge_delta(reweights=[(u, v, 3.0)])
     r = svc.rank([roots])[0]
     snap = svc.telemetry_snapshot()
-    assert snap["service.delta.replanned"] >= 1
-    assert snap["service.delta.patched"] == 0
+    assert snap["service.delta.patched"]["sharded"] >= 1
+    assert snap["service.delta.replanned"] == 0
 
     oracle = make(g, backend="sharded", shard_devices=1)
     oracle.apply_edge_delta(reweights=[(u, v, 3.0)])
@@ -100,7 +100,7 @@ def test_patch_vs_replan_parity(g):
     u, v = union_edge(svc, roots)
     svc.apply_edge_delta(reweights=[(u, v, 0.5)])
     r = svc.rank([roots])[0]
-    assert svc.telemetry_snapshot()["service.delta.patched"] >= 1
+    assert svc.telemetry_snapshot()["service.delta.patched"]["dense"] >= 1
 
     rebuilt = make(g, backend="dense", plan_cache_size=0)
     rebuilt.apply_edge_delta(reweights=[(u, v, 0.5)])
